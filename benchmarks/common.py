@@ -1,0 +1,18 @@
+"""Shared benchmark plumbing: timing + CSV row helpers."""
+from __future__ import annotations
+
+import time
+
+
+def timed(fn, *args, repeat: int = 1, **kw):
+    """Returns (result, us_per_call)."""
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt * 1e6
+
+
+def row(name: str, us: float, derived) -> str:
+    return f"{name},{us:.1f},{derived}"

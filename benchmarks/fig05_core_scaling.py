@@ -1,0 +1,41 @@
+"""Paper Fig 5 / Fig 12: container latency vs core count.
+
+Amdahl-with-contention model: latency(c) = (1-p) + p/c + k(c-1), with the
+parallel fraction p fitted to the paper's measured 2-core reductions
+(ingest/detect 16%, identification 36%) and Object Detection's near-linear
+detection stage (Fig 12)."""
+from __future__ import annotations
+
+from benchmarks.common import row, timed
+
+PROFILES = {
+    # name: (parallel fraction, contention/core)
+    "ingest_detect": (0.34, 0.010),
+    "identification": (0.76, 0.020),
+    "objdet_detection": (0.97, 0.002),
+}
+
+
+def rel_latency(p: float, k: float, cores: int) -> float:
+    return (1 - p) + p / cores + k * (cores - 1)
+
+
+def run() -> list[str]:
+    out = []
+    for name, (p, k) in PROFILES.items():
+        (vals, us) = timed(lambda: [rel_latency(p, k, c)
+                                    for c in (1, 2, 4, 8, 16, 28)])
+        two_core = 1 - vals[1]
+        out.append(row(f"fig05/{name}", us,
+                       f"2core_reduction={two_core:.2f};"
+                       f"curve={['%.2f' % v for v in vals]}"))
+    # paper checks: 16% and 36% at 2 cores; degradation by high core counts
+    assert abs((1 - rel_latency(*PROFILES['ingest_detect'], 2)) - 0.16) < 0.02
+    assert abs((1 - rel_latency(*PROFILES['identification'], 2)) - 0.36) < 0.03
+    assert rel_latency(*PROFILES['identification'], 28) > \
+        rel_latency(*PROFILES['identification'], 8)
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

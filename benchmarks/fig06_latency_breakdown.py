@@ -1,0 +1,35 @@
+"""Paper Fig 6: end-to-end frame latency breakdown (real video stats:
+0.64 faces/frame, spiky). Paper: ingestion 18.8ms, detection 74.8ms,
+broker wait 126.1ms (>33%), identification 131.5ms; e2e 351ms."""
+from __future__ import annotations
+
+from benchmarks.common import row, timed
+from repro.core.broker import BrokerConfig
+from repro.core.simulator import ClusterSim, FaceRecWorkload
+
+PAPER = {"ingest": 0.0188, "detect": 0.0748, "wait": 0.1261,
+         "identify": 0.1315}
+
+
+def run() -> list[str]:
+    wl = FaceRecWorkload(face_dist="empirical", faces_per_frame=0.64)
+    sim = ClusterSim(wl, BrokerConfig(), speedup=1, scale=0.04,
+                     sim_time=25, warmup=6)
+    res, us = timed(sim.run)
+    bd = res.stage_means
+    out = []
+    for stage in ("ingest", "detect", "wait", "identify"):
+        ours = bd.get(stage, 0.0)
+        out.append(row(f"fig06/{stage}", us,
+                       f"ours_ms={ours*1e3:.1f};paper_ms={PAPER[stage]*1e3:.1f}"))
+    e2e = res.mean_latency
+    out.append(row("fig06/e2e", us,
+                   f"ours_ms={e2e*1e3:.1f};paper_ms=351;"
+                   f"wait_share={res.waiting_share:.2f};paper_share>0.33"))
+    out.append(row("fig06/p99", us, f"ours_ms={res.p99_latency*1e3:.0f};"
+                   "paper_ms=2210"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

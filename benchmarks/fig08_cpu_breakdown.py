@@ -1,0 +1,34 @@
+"""Paper Fig 8 / §4.3: CPU-time breakdown — AI vs supporting code.
+
+Two substrates: (a) the paper's measured fractions (encoded constants the
+Amdahl analysis runs on), (b) the LIVE pipeline on this container,
+measured with the same event instrumentation."""
+from __future__ import annotations
+
+from benchmarks.common import row, timed
+from repro.core import acceleration as acc
+from repro.core.pipeline import StreamingPipeline
+
+
+def run() -> list[str]:
+    out = []
+    # (a) paper constants round-trip through the analysis code
+    out.append(row("fig08/paper_detection_ai", 0.0,
+                   f"ai={acc.DETECTION.ai_fraction};paper=0.42"))
+    out.append(row("fig08/paper_identification_ai", 0.0,
+                   f"ai={acc.IDENTIFICATION.ai_fraction};paper=0.88"))
+    out.append(row("fig08/paper_e2e_ai", 0.0,
+                   f"ai={acc.E2E_AI_FRACTION};paper=0.552"))
+    # (b) live pipeline measured on this container
+    res, us = timed(lambda: StreamingPipeline(n_frames=30, seed=0).run())
+    tax = res.ai_tax()
+    out.append(row("fig08/live_pipeline_ai_fraction", us,
+                   f"ai={tax['ai_fraction']:.2f};tax={tax['tax_fraction']:.2f};"
+                   f"recall={res.recall:.2f}"))
+    for stage, v in sorted(tax["per_stage"].items()):
+        out.append(row(f"fig08/live_{stage}", us, f"mean_ms={v*1e3:.2f}"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,22 @@
+"""Paper Fig 9: Amdahl projections of per-stage speedup under AI-only
+acceleration. Paper anchors: detection asymptote 1.74x (1.59x @8, 1.66x
+@16); identification asymptote 8.3x (5.6x @16, 6.6x @32)."""
+from __future__ import annotations
+
+from benchmarks.common import row, timed
+from repro.core import acceleration as acc
+
+
+def run() -> list[str]:
+    out = []
+    speedups = (1, 2, 4, 8, 16, 32)
+    for prof in (acc.INGESTION, acc.DETECTION, acc.IDENTIFICATION):
+        curve, us = timed(lambda p=prof: acc.amdahl_curve(p, speedups))
+        pts = ";".join(f"{s}x:{v:.2f}" for s, v in curve)
+        out.append(row(f"fig09/{prof.name}", us,
+                       f"asymptote={prof.asymptote:.2f};{pts}"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,27 @@
+"""Paper Fig 10: frame latency + throughput under AI acceleration
+(1 face/frame emulation). Paper: latency falls and throughput scales to
+6x; at 8x the system is queueing-unstable (latency -> infinity)."""
+from __future__ import annotations
+
+from benchmarks.common import row, timed
+from repro.core.broker import BrokerConfig
+from repro.core.simulator import ClusterSim, FaceRecWorkload
+
+
+def run() -> list[str]:
+    out = []
+    for s in (1, 2, 4, 6, 8):
+        sim = ClusterSim(FaceRecWorkload(), BrokerConfig(), speedup=s,
+                         scale=0.04, sim_time=20, warmup=5)
+        res, us = timed(sim.run)
+        lat = ("inf" if res.mean_latency == float("inf")
+               else f"{res.mean_latency*1e3:.0f}")
+        out.append(row(f"fig10/S{s}", us,
+                       f"lat_ms={lat};thr={res.throughput:.0f}/s;"
+                       f"wait_share={res.waiting_share:.2f};"
+                       f"unstable={res.unstable}"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,27 @@
+"""Paper Figs 13/14 (§6): the second application, Object Detection.
+Paper: 687ms detection / 629ms wait at 1x; throughput scales to ~8x;
+latency >3000ms by 12x; infinite at 16x with a growing producer-side
+"Delay" tax."""
+from __future__ import annotations
+
+from benchmarks.common import row, timed
+from repro.core.broker import BrokerConfig
+from repro.core.simulator import ClusterSim, object_detection_workload
+
+
+def run() -> list[str]:
+    out = []
+    for s in (1, 4, 8, 12, 16):
+        sim = ClusterSim(object_detection_workload(), BrokerConfig(),
+                         speedup=s, scale=0.3, sim_time=20, warmup=5)
+        res, us = timed(sim.run)
+        lat = ("inf" if res.mean_latency == float("inf")
+               else f"{res.mean_latency*1e3:.0f}")
+        out.append(row(f"fig14/S{s}", us,
+                       f"lat_ms={lat};delay_ms={res.ingest_delay_mean*1e3:.0f};"
+                       f"thr={res.throughput:.0f}/s;unstable={res.unstable}"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,36 @@
+"""Paper Fig 15: unlocking higher speedups — (a) more drives per broker,
+(b) more brokers, (c) smaller thumbnails. Reported as the max stable
+acceleration factor per configuration (paper: drives 1/2/3/4 ->
+<8x/12x/24x/32x; brokers 3->8 raise the limit monotonically; thumbnail
+halving roughly doubles it)."""
+from __future__ import annotations
+
+from benchmarks.common import row, timed
+from repro.core.broker import BrokerConfig
+from repro.core.queueing import max_stable_speedup
+from repro.core.simulator import FaceRecWorkload
+
+PAPER_DRIVES = {1: "<8", 2: "12", 3: "24", 4: "32"}
+
+
+def run() -> list[str]:
+    out = []
+    wl = FaceRecWorkload()
+    for d in (1, 2, 3, 4):
+        s, us = timed(max_stable_speedup, wl,
+                      BrokerConfig(drives_per_broker=d))
+        out.append(row(f"fig15a/drives{d}", us,
+                       f"max_stable={s:.1f};paper_unlocks={PAPER_DRIVES[d]}"))
+    for n in (3, 4, 6, 8):
+        s, us = timed(max_stable_speedup, wl, BrokerConfig(n_brokers=n))
+        out.append(row(f"fig15b/brokers{n}", us, f"max_stable={s:.1f}"))
+    for frac in (1.0, 0.5, 0.25, 0.125):
+        s, us = timed(max_stable_speedup,
+                      FaceRecWorkload(face_bytes=37_300 * frac),
+                      BrokerConfig())
+        out.append(row(f"fig15c/face_x{frac}", us, f"max_stable={s:.1f}"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,57 @@
+"""§Roofline: the full (arch x shape) table from dry-run artifacts.
+
+Reads artifacts/dryrun/pod16x16/*.json (single-pod, per the assignment)
+and prints the three terms, dominant bottleneck, useful-FLOPs ratio and
+roofline fraction per cell. Rows exist only if the dry-run sweep ran."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import row
+
+ART = os.environ.get("DRYRUN_DIR", "artifacts/dryrun/pod16x16")
+
+
+def load_cells(art_dir: str = ART, variant: str | None = None) -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(f"{art_dir}/*.json")):
+        base = os.path.basename(path)
+        is_variant = "__" in base.rsplit(".", 1)[0].split("__", 2)[-1] \
+            if base.count("__") >= 2 else False
+        with open(path) as f:
+            d = json.load(f)
+        if d.get("status") != "ok":
+            continue
+        if variant is None and d.get("variant", "baseline") != "baseline":
+            continue
+        if variant is not None and d.get("variant") != variant:
+            continue
+        cells.append(d)
+    return cells
+
+
+def run() -> list[str]:
+    out = []
+    cells = load_cells()
+    if not cells:
+        return [row("roofline/missing", 0.0,
+                    "run: python -m repro.launch.dryrun --all")]
+    for d in cells:
+        name = f"roofline/{d['arch']}__{d['shape']}"
+        out.append(row(
+            name, d.get("t_compile_s", 0.0) * 1e6,
+            f"t_comp={d['t_compute']:.3g}s;t_mem={d['t_memory']:.3g}s;"
+            f"t_coll={d['t_collective']:.3g}s;bound={d['bottleneck']};"
+            f"useful={d['useful_flops_ratio']:.2f};"
+            f"frac={d['roofline_fraction']:.3f};"
+            f"mem_ok={d['peak_memory_ok']}"))
+    n_ok = sum(1 for d in cells if d["peak_memory_ok"])
+    out.append(row("roofline/summary", 0.0,
+                   f"cells={len(cells)};mem_ok={n_ok}"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

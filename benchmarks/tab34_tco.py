@@ -1,0 +1,34 @@
+"""Paper Tables 3/4 + §7.3: TCO of homogeneous vs purpose-built edge data
+center. Paper: equipment $33,577,760 vs $27,878,431; purpose-built yearly
+TCO ~16.6% lower while supporting 32x accelerated AI."""
+from __future__ import annotations
+
+from benchmarks.common import row, timed
+from repro.core.tco import (
+    TCOComparison, homogeneous_design, paper_comparison, purpose_built_design,
+)
+
+
+def run() -> list[str]:
+    out = []
+    h1, us = timed(homogeneous_design, 1024, 1)
+    out.append(row("tab3/homogeneous_equipment", us,
+                   f"ours=${h1.equipment_cost:,.0f};paper=$33,577,760"))
+    p, us = timed(purpose_built_design)
+    out.append(row("tab4/purpose_built_equipment", us,
+                   f"ours=${p.equipment_cost:,.0f};paper=$27,878,431"))
+    c32 = paper_comparison(support_32x=True)
+    out.append(row("sec7/tco_saving_vs_32x_homogeneous", 0.0,
+                   f"saving={c32.saving_fraction:.3f};paper>0.15"))
+    cbase = TCOComparison(homogeneous_design(1024, 1), purpose_built_design())
+    out.append(row("sec7/tco_saving_vs_base_homogeneous", 0.0,
+                   f"saving={cbase.saving_fraction:.3f};paper=0.166"))
+    out.append(row("sec7/yearly_tco_homogeneous", 0.0,
+                   f"ours=${cbase.homogeneous.yearly_tco/1e6:.1f}M;paper=$12.9M"))
+    out.append(row("sec7/yearly_tco_purpose_built", 0.0,
+                   f"ours=${cbase.purpose_built.yearly_tco/1e6:.1f}M;paper=$10.8M"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,28 @@
+"""End-to-end driver: the paper's Face Recognition pipeline, live.
+
+Synthetic video -> ingestion (resize kernel) -> detection -> broker queue
+-> identification, with event instrumentation producing the paper's
+Fig 6 / Fig 8 style breakdown for THIS machine.
+
+    PYTHONPATH=src python examples/serve_pipeline.py [n_frames]
+"""
+import sys
+
+from repro.core.pipeline import StreamingPipeline
+
+n = int(sys.argv[1]) if len(sys.argv) > 1 else 60
+res = StreamingPipeline(n_frames=n, fuse_ingest_detect=True,
+                        n_identify_workers=2, seed=0).run()
+
+print(f"frames={n}  faces_detected={res.detected}  "
+      f"ground_truth={res.ground_truth}  recall={res.recall:.2f}")
+tax = res.ai_tax()
+print(f"\nAI fraction of latency: {tax['ai_fraction']:.1%}   "
+      f"AI TAX: {tax['tax_fraction']:.1%}")
+print(f"{'stage':<14}{'mean ms':>10}")
+for stage, v in sorted(tax["per_stage"].items()):
+    print(f"{stage:<14}{v*1e3:>10.2f}")
+p99 = res.log.tail(0.99)
+print(f"\nmean e2e: {res.log.mean_e2e()*1e3:.1f} ms   p99: {p99*1e3:.1f} ms")
+print("\n(paper, full cluster: ingestion 18.8 / detection 74.8 / "
+      "broker wait 126.1 / identification 131.5 ms; e2e 351 ms)")

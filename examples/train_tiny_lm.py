@@ -1,0 +1,42 @@
+"""End-to-end training driver: tiny LM, a few hundred steps on CPU, with
+async checkpointing, restart-resume and the fault-tolerance loop.
+
+    PYTHONPATH=src python examples/train_tiny_lm.py [steps] [arch]
+"""
+import sys
+
+import jax
+
+from repro.configs import get_config
+from repro.data.tokens import TokenLoader
+from repro.models.model import build_model
+from repro.train.optimizer import AdamWConfig, adamw_update
+from repro.train.trainer import Trainer, TrainerConfig
+
+steps = int(sys.argv[1]) if len(sys.argv) > 1 else 200
+arch = sys.argv[2] if len(sys.argv) > 2 else "llama3-8b"
+
+cfg = get_config(arch, smoke=True).replace(dtype="float32")
+model = build_model(cfg)
+print(f"training {cfg.name}: {model.n_params():,} params, {steps} steps")
+
+hp = AdamWConfig(lr=3e-3, warmup_steps=20, total_steps=steps)
+
+
+def step(params, opt, batch):
+    loss, grads = jax.value_and_grad(model.loss)(params, batch)
+    params, opt, gn = adamw_update(grads, opt, params, hp)
+    return params, opt, {"loss": loss, "grad_norm": gn, "step": opt.count}
+
+
+loader = TokenLoader(cfg.vocab_size, batch=8, seq_len=64)
+tc = TrainerConfig(steps=steps, ckpt_every=50, log_every=20,
+                   ckpt_dir="/tmp/repro_example_ckpt")
+trainer = Trainer(model, jax.jit(step), loader, tc)
+params, opt, hist = trainer.run()
+print(f"\nfirst-10 mean loss: "
+      f"{sum(h['loss'] for h in hist[:10]) / max(len(hist[:10]),1):.4f}")
+print(f"last-10 mean loss:  "
+      f"{sum(h['loss'] for h in hist[-10:]) / max(len(hist[-10:]),1):.4f}")
+print(f"checkpoints: {trainer.ckpt.all_steps()} in {tc.ckpt_dir}")
+print("re-run this script: it resumes from the latest checkpoint.")

@@ -1,0 +1,55 @@
+"""Acceleration analytics (paper §5.1): Amdahl limits per stage and the
+emulated-acceleration transform applied to measured stage profiles."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class StageProfile:
+    """CPU-time split of one pipeline stage (paper Fig 8)."""
+    name: str
+    ai_fraction: float          # fraction of cycles in AI kernels
+
+    def amdahl_speedup(self, s: float) -> float:
+        """Overall stage speedup when ONLY the AI part runs s x faster."""
+        f = self.ai_fraction
+        return 1.0 / ((1.0 - f) + f / s)
+
+    @property
+    def asymptote(self) -> float:
+        return 1.0 / (1.0 - self.ai_fraction) if self.ai_fraction < 1 else float("inf")
+
+
+# paper Fig 8 measurements
+INGESTION = StageProfile("ingestion", 0.0)
+DETECTION = StageProfile("detection", 0.42)
+IDENTIFICATION = StageProfile("identification", 0.88)
+
+# paper §4.3: end-to-end compute-cycle split of Face Recognition
+E2E_AI_FRACTION = 0.552
+E2E_TAX = {
+    "ai": 0.552, "resizing": 0.178, "networking": 0.090,
+    "tensor_prep": 0.052, "kafka": 0.036, "other": 0.092,
+}
+
+
+def amdahl_curve(profile: StageProfile, speedups) -> list[tuple[float, float]]:
+    return [(s, profile.amdahl_speedup(s)) for s in speedups]
+
+
+def emulated_times(t_measured: dict[str, float], s: float,
+                   ai_only: bool = False,
+                   profiles: dict[str, StageProfile] | None = None
+                   ) -> dict[str, float]:
+    """The paper's §5.2 emulation: stage times / s.
+
+    With ``ai_only=True``, apply Amdahl per stage instead (only the AI
+    portion accelerates — §5.1's analytical view)."""
+    out = {}
+    for stage, t in t_measured.items():
+        if ai_only and profiles and stage in profiles:
+            out[stage] = t / profiles[stage].amdahl_speedup(s)
+        else:
+            out[stage] = t / s
+    return out

@@ -1,0 +1,100 @@
+"""Apache-Kafka-model broker substrate (paper §3.4).
+
+Models the mechanisms the paper measures:
+  * topics split into partitions (max one consumer per partition);
+  * leader + follower replication (``replication`` copies, acks=1:
+    a message is consumable after the leader write; follower traffic is
+    asynchronous background load);
+  * producer-side batching (``linger_s``, ``batch_bytes``);
+  * broker-side consumer fetch batching (``fetch_min_bytes``,
+    ``fetch_max_wait_s``) — the mechanism behind §5.5's waiting-time floor;
+  * storage write channel per broker with configurable drive count —
+    the resource §5.4 shows saturating under AI acceleration.
+
+Calibration note (documented in EXPERIMENTS.md §Paper-validation): the
+paper reports broker storage write utilization of ~10% at 1x with the
+Fig-10 setup, which matches leader-write accounting; async follower
+replication in their deployment evidently consolidated into large
+sequential writes whose marginal cost is folded into the drive-efficiency
+constant rather than tripling byte volume.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class BrokerConfig:
+    n_brokers: int = 3
+    replication: int = 3
+    drives_per_broker: int = 1
+    drive_write_bw: float = 1.1e9        # bytes/s (Intel P4510, Table 2)
+    drive_read_bw: float = 2.85e9
+    # multi-drive striping efficiency (queue-depth effects; calibrated to
+    # the paper's Fig 15a unlock points)
+    drive_efficiency: tuple = (0.75, 0.65, 0.83, 0.83)
+    write_overhead_bytes: int = 800      # per-record log overhead (fs+index)
+    linger_s: float = 0.005              # producer batching window
+    batch_bytes: int = 16384
+    fetch_min_bytes: int = 150 * 1024    # broker withholds until this...
+    fetch_max_wait_s: float = 0.5        # ...or this timeout (Kafka defaults)
+    net_bw: float = 100e9 / 8            # 100 Gbps NIC, bytes/s
+    page_cache_reads: bool = True        # consumer reads served from memory
+
+    @property
+    def storage_write_capacity(self) -> float:
+        """Effective bytes/s per broker across its drives."""
+        d = self.drives_per_broker
+        eff = self.drive_efficiency[min(d, len(self.drive_efficiency)) - 1]
+        return d * self.drive_write_bw * eff
+
+
+@dataclass
+class Partition:
+    topic: str
+    index: int
+    leader: int                        # broker id
+    backlog: list = field(default_factory=list)   # (ready_time, msg)
+    bytes_in: float = 0.0
+
+    def append(self, ready_time: float, msg) -> None:
+        self.backlog.append((ready_time, msg))
+        self.bytes_in += msg.size
+
+
+@dataclass
+class Message:
+    key: int
+    size: float
+    t_produced: float                  # end of producing stage
+    t_published: float = 0.0           # after producer batching
+    t_written: float = 0.0             # leader write done (consumable)
+    t_consumed: float = 0.0            # consumer picks it up
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def broker_wait(self) -> float:
+        return self.t_consumed - self.t_produced
+
+
+class Topic:
+    """Partitioned topic with round-robin producer assignment."""
+
+    def __init__(self, name: str, n_partitions: int, cfg: BrokerConfig):
+        self.name = name
+        self.cfg = cfg
+        self.partitions = [
+            Partition(name, i, leader=i % cfg.n_brokers)
+            for i in range(n_partitions)]
+        self._rr = 0
+
+    def pick_partition(self) -> Partition:
+        p = self.partitions[self._rr % len(self.partitions)]
+        self._rr += 1
+        return p
+
+    def bytes_per_broker(self) -> dict[int, float]:
+        out: dict[int, float] = {}
+        for p in self.partitions:
+            out[p.leader] = out.get(p.leader, 0.0) + p.bytes_in
+        return out

@@ -1,0 +1,126 @@
+"""Event-level instrumentation (the paper's measurement technique, §4.1).
+
+Application progress is a sequence of "events" — high-level steps a request
+passes through (ingestion, detection, broker wait, identification...). Each
+event records wall-time span, payload size and metadata; aggregation
+produces the paper's Fig-6-style latency breakdowns and Fig-8-style cycle
+breakdowns without perturbing the application (logging is O(1) appends).
+"""
+from __future__ import annotations
+
+import json
+import math
+import time
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+
+@dataclass
+class Event:
+    request_id: int
+    stage: str
+    t_start: float
+    t_end: float
+    payload_bytes: int = 0
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def duration(self) -> float:
+        return self.t_end - self.t_start
+
+
+class EventLog:
+    """Append-only event store + aggregations."""
+
+    def __init__(self):
+        self.events: list[Event] = []
+
+    def log(self, request_id: int, stage: str, t_start: float, t_end: float,
+            payload_bytes: int = 0, **meta) -> Event:
+        ev = Event(request_id, stage, t_start, t_end, payload_bytes, meta)
+        self.events.append(ev)
+        return ev
+
+    # ---- aggregations -----------------------------------------------------
+
+    def stage_latencies(self) -> dict[str, list[float]]:
+        out: dict[str, list[float]] = defaultdict(list)
+        for ev in self.events:
+            out[ev.stage].append(ev.duration)
+        return dict(out)
+
+    def breakdown(self, percentile: float | None = None) -> dict[str, float]:
+        """Mean (or percentile) latency per stage."""
+        out = {}
+        for stage, ds in self.stage_latencies().items():
+            ds = sorted(ds)
+            if percentile is None:
+                out[stage] = sum(ds) / len(ds)
+            else:
+                out[stage] = ds[min(len(ds) - 1,
+                                    int(math.ceil(percentile * len(ds))) - 1)]
+        return out
+
+    def end_to_end(self, stages: list[str] | None = None) -> list[float]:
+        """Per-request total latency (first start -> last end)."""
+        spans: dict[int, list[Event]] = defaultdict(list)
+        for ev in self.events:
+            if stages is None or ev.stage in stages:
+                spans[ev.request_id].append(ev)
+        return [max(e.t_end for e in evs) - min(e.t_start for e in evs)
+                for evs in spans.values() if evs]
+
+    def tail(self, q: float = 0.99) -> float:
+        e2e = sorted(self.end_to_end())
+        if not e2e:
+            return 0.0
+        return e2e[min(len(e2e) - 1, int(math.ceil(q * len(e2e))) - 1)]
+
+    def mean_e2e(self) -> float:
+        e2e = self.end_to_end()
+        return sum(e2e) / len(e2e) if e2e else 0.0
+
+    def ai_tax(self, ai_stages: set[str]) -> dict[str, float]:
+        """Fraction of total time in AI vs supporting stages (the AI tax)."""
+        by_stage = self.breakdown()
+        ai = sum(v for s, v in by_stage.items() if s in ai_stages)
+        total = sum(by_stage.values())
+        return {"ai_fraction": ai / total if total else 0.0,
+                "tax_fraction": 1.0 - (ai / total if total else 0.0),
+                "total_latency": total,
+                "per_stage": by_stage}
+
+    def throughput(self) -> float:
+        """Completed requests per second over the observed span."""
+        if not self.events:
+            return 0.0
+        t0 = min(e.t_start for e in self.events)
+        t1 = max(e.t_end for e in self.events)
+        n = len({e.request_id for e in self.events})
+        return n / (t1 - t0) if t1 > t0 else 0.0
+
+    def to_jsonl(self, path: str) -> None:
+        with open(path, "w") as f:
+            for ev in self.events:
+                f.write(json.dumps({
+                    "request_id": ev.request_id, "stage": ev.stage,
+                    "t_start": ev.t_start, "t_end": ev.t_end,
+                    "payload_bytes": ev.payload_bytes, **ev.meta}) + "\n")
+
+
+class Timer:
+    """Context manager that logs an event on exit (live pipelines)."""
+
+    def __init__(self, log: EventLog, request_id: int, stage: str,
+                 payload_bytes: int = 0, clock=time.perf_counter, **meta):
+        self.log, self.request_id, self.stage = log, request_id, stage
+        self.payload_bytes, self.meta, self.clock = payload_bytes, meta, clock
+
+    def __enter__(self):
+        self.t0 = self.clock()
+        return self
+
+    def __exit__(self, *exc):
+        self.log.log(self.request_id, self.stage, self.t0, self.clock(),
+                     self.payload_bytes, **self.meta)
+        return False

@@ -1,0 +1,95 @@
+"""Face Recognition demo models (tiny, pure JAX, CPU-runnable).
+
+The paper's application uses MTCNN + FaceNet; this module provides
+family-equivalent stand-ins sized for the container so the *pipeline* is
+real end-to-end: a blob detector (heatmap + peak extraction = the
+"detection model"), a thumbnail embedder (conv-ish MLP = "feature
+extraction"), and a nearest-centroid classifier (the "SVM"). Synthetic
+frames carry ground-truth face positions (repro.data.video), so detection
+recall is testable.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+THUMB = 32          # thumbnail side (paper: 160x160)
+EMBED_DIM = 128     # paper: 128-byte feature vector
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def detect_heatmap(frame: jax.Array, pool: int = 8) -> jax.Array:
+    """Brightness heatmap at 1/pool resolution. frame: (H, W, 3) uint8."""
+    x = frame.astype(jnp.float32).mean(-1)
+    H, W = x.shape
+    x = x[:H - H % pool, :W - W % pool]
+    x = x.reshape(H // pool, pool, W // pool, pool).mean((1, 3))
+    return x
+
+
+def detect_faces(frame: np.ndarray, pool: int = 8, thresh: float = 60.0,
+                 max_faces: int = 5) -> list[tuple[int, int]]:
+    """Peak extraction on the heatmap -> face centers (full-res coords)."""
+    hm = np.asarray(detect_heatmap(jnp.asarray(frame), pool))
+    out = []
+    hm = hm.copy()
+    for _ in range(max_faces):
+        ij = np.unravel_index(np.argmax(hm), hm.shape)
+        if hm[ij] < thresh:
+            break
+        out.append((int(ij[0] * pool + pool // 2),
+                    int(ij[1] * pool + pool // 2)))
+        y0, x0 = ij
+        hm[max(0, y0 - 3):y0 + 4, max(0, x0 - 3):x0 + 4] = 0.0
+    return out
+
+
+def crop_thumbnail(frame: np.ndarray, y: int, x: int,
+                   size: int = 48) -> np.ndarray:
+    H, W, _ = frame.shape
+    half = size // 2
+    y = int(np.clip(y, half, H - half))
+    x = int(np.clip(x, half, W - half))
+    crop = frame[y - half:y + half, x - half:x + half]
+    # the paper's resize tax: normalize crop to the model's input size
+    return np.asarray(ops.resize_bilinear(
+        jnp.asarray(crop, jnp.float32), THUMB, THUMB))
+
+
+class Embedder:
+    """Feature extraction: fixed random projection MLP (FaceNet stand-in)."""
+
+    def __init__(self, seed: int = 7):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        d_in = THUMB * THUMB * 3
+        self.w1 = jax.random.normal(k1, (d_in, 256)) / d_in**0.5
+        self.w2 = jax.random.normal(k2, (256, EMBED_DIM)) / 16.0
+        self._fn = jax.jit(self._embed)
+
+    def _embed(self, thumb):
+        x = thumb.reshape(-1) / 255.0
+        h = jnp.tanh(x @ self.w1)
+        e = h @ self.w2
+        return e / jnp.linalg.norm(e)
+
+    def __call__(self, thumb: np.ndarray) -> np.ndarray:
+        return np.asarray(self._fn(jnp.asarray(thumb)))
+
+
+class Classifier:
+    """Nearest-centroid over a gallery of known identities."""
+
+    def __init__(self, gallery: dict[str, np.ndarray]):
+        self.names = list(gallery)
+        self.mat = np.stack([gallery[n] for n in self.names])
+
+    def identify(self, emb: np.ndarray) -> tuple[str, float]:
+        sims = self.mat @ emb
+        i = int(np.argmax(sims))
+        return self.names[i], float(sims[i])

@@ -1,0 +1,150 @@
+"""Live streaming pipeline: the paper's application shape, actually running.
+
+Stages run in their own threads connected by broker queues (the in-process
+analogue of the Kafka topics in Fig 4), with per-request event logging at
+every boundary: the same instrumentation produces Fig-6-style breakdowns
+for this REAL pipeline as for the simulated cluster.
+
+Supports both deployments of paper Fig 3:
+  * two-stage  (fuse_ingest_detect=True, the paper's choice): frames move
+    in-process; only face thumbnails cross the broker;
+  * three-stage: frames also cross a broker topic.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import facerec
+from repro.core.events import EventLog, Timer
+from repro.data.video import VideoStream
+
+
+_STOP = object()
+
+
+@dataclass
+class PipelineResult:
+    log: EventLog
+    identities: list
+    detected: int
+    ground_truth: int
+    matched: int
+
+    @property
+    def recall(self) -> float:
+        return self.matched / self.ground_truth if self.ground_truth else 1.0
+
+    def ai_tax(self) -> dict:
+        return self.log.ai_tax(ai_stages={"detect", "identify"})
+
+
+class StreamingPipeline:
+    def __init__(self, *, n_frames: int = 60, fuse_ingest_detect: bool = True,
+                 n_identify_workers: int = 2, seed: int = 0,
+                 gallery_size: int = 8):
+        self.n_frames = n_frames
+        self.fused = fuse_ingest_detect
+        self.n_workers = n_identify_workers
+        self.video = VideoStream(seed=seed)
+        self.log = EventLog()
+        self.embedder = facerec.Embedder()
+        rng = np.random.default_rng(seed)
+        gallery = {}
+        for i in range(gallery_size):
+            thumb = rng.uniform(0, 255, (facerec.THUMB, facerec.THUMB, 3))
+            gallery[f"person_{i}"] = self.embedder(thumb.astype(np.float32))
+        self.classifier = facerec.Classifier(gallery)
+        # broker topics (queues); maxsize models bounded broker capacity
+        self.faces_topic: queue.Queue = queue.Queue(maxsize=4096)
+        self.frames_topic: queue.Queue = queue.Queue(maxsize=1024)
+        self.identities: list = []
+        self._ident_lock = threading.Lock()
+        self.detected = 0
+        self.ground_truth = 0
+        self.matched = 0
+
+    # ---- stages ------------------------------------------------------------
+
+    def _ingest_frames(self):
+        """Parse + resize (pre-processing only — no AI)."""
+        from repro.kernels import ops
+        import jax.numpy as jnp
+        for i in range(self.n_frames):
+            frame = self.video.next_frame()
+            with Timer(self.log, frame.index, "ingest",
+                       payload_bytes=frame.pixels.nbytes):
+                small = np.asarray(ops.resize_bilinear(
+                    jnp.asarray(frame.pixels, jnp.float32),
+                    frame.pixels.shape[0] // 2, frame.pixels.shape[1] // 2))
+            item = (frame.index, small, frame.true_boxes, time.perf_counter())
+            if self.fused:
+                self._detect_one(item)
+            else:
+                self.frames_topic.put(item)
+        if not self.fused:
+            self.frames_topic.put(_STOP)
+
+    def _detect_loop(self):
+        while True:
+            item = self.frames_topic.get()
+            if item is _STOP:
+                break
+            rid, small, boxes, t_q = item
+            self.log.log(rid, "wait_frames", t_q, time.perf_counter(),
+                         payload_bytes=small.nbytes)
+            self._detect_one((rid, small, boxes, t_q))
+
+    def _detect_one(self, item):
+        rid, small, true_boxes, _ = item
+        with Timer(self.log, rid, "detect", payload_bytes=small.nbytes):
+            centers = facerec.detect_faces(small.astype(np.uint8))
+            thumbs = [facerec.crop_thumbnail(small, y, x) for y, x in centers]
+        self.ground_truth += len(true_boxes)
+        self.detected += len(centers)
+        # match detections to ground truth (within 1.5x blob size)
+        for (ty, tx, ts) in true_boxes:
+            if any(abs(cy - ty / 2) < 1.5 * ts and abs(cx - tx / 2) < 1.5 * ts
+                   for cy, cx in centers):
+                self.matched += 1
+        for thumb in thumbs:
+            self.faces_topic.put((rid, thumb, time.perf_counter()))
+
+    def _identify_loop(self):
+        while True:
+            item = self.faces_topic.get()
+            if item is _STOP:
+                break
+            rid, thumb, t_q = item
+            self.log.log(rid, "wait", t_q, time.perf_counter(),
+                         payload_bytes=thumb.nbytes)
+            with Timer(self.log, rid, "identify", payload_bytes=thumb.nbytes):
+                emb = self.embedder(thumb)
+                name, sim = self.classifier.identify(emb)
+            with self._ident_lock:
+                self.identities.append((rid, name, sim))
+
+    # ---- run ---------------------------------------------------------------
+
+    def run(self) -> PipelineResult:
+        workers = [threading.Thread(target=self._identify_loop)
+                   for _ in range(self.n_workers)]
+        for w in workers:
+            w.start()
+        det = None
+        if not self.fused:
+            det = threading.Thread(target=self._detect_loop)
+            det.start()
+        self._ingest_frames()
+        if det is not None:
+            det.join()
+        for _ in workers:
+            self.faces_topic.put(_STOP)
+        for w in workers:
+            w.join()
+        return PipelineResult(self.log, self.identities, self.detected,
+                              self.ground_truth, self.matched)

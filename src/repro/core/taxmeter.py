@@ -1,0 +1,65 @@
+"""TaxMeter: AI-tax instrumentation for real JAX serving/training steps.
+
+The paper's tax categories, applied to a TPU-resident step: host
+pre-processing, host->device transfer, device compute (the only "AI"
+part), device->host transfer, and post-processing. Wraps any step
+function; produces the same breakdown structure as the cluster sim so
+both substrates are comparable in one table.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+from repro.core.events import EventLog
+
+
+@dataclass
+class TaxedStep:
+    log: EventLog
+    name: str = "step"
+
+    def run(self, request_id: int, *, pre=None, compute=None, post=None,
+            payload=None):
+        """Executes pre -> h2d -> compute (block_until_ready) -> post."""
+        t = time.perf_counter
+        x = payload
+        if pre is not None:
+            t0 = t()
+            x = pre(x)
+            self.log.log(request_id, f"{self.name}/pre", t0, t(),
+                         _nbytes(x))
+        t0 = t()
+        x_dev = jax.device_put(x) if x is not None else None
+        jax.block_until_ready(x_dev)
+        self.log.log(request_id, f"{self.name}/h2d", t0, t(), _nbytes(x))
+        t0 = t()
+        y = compute(x_dev) if x_dev is not None else compute()
+        jax.block_until_ready(y)
+        self.log.log(request_id, f"{self.name}/compute", t0, t())
+        t0 = t()
+        y_host = jax.device_get(y)
+        self.log.log(request_id, f"{self.name}/d2h", t0, t(), _nbytes(y_host))
+        if post is not None:
+            t0 = t()
+            y_host = post(y_host)
+            self.log.log(request_id, f"{self.name}/post", t0, t())
+        return y_host
+
+    def breakdown(self) -> dict:
+        per = self.log.breakdown()
+        compute = sum(v for k, v in per.items() if k.endswith("/compute"))
+        total = sum(per.values())
+        return {"per_stage": per,
+                "ai_fraction": compute / total if total else 0.0,
+                "tax_fraction": 1 - (compute / total if total else 0.0)}
+
+
+def _nbytes(x) -> int:
+    if x is None:
+        return 0
+    return int(sum(np.asarray(l).nbytes
+                   for l in jax.tree.leaves(x)))

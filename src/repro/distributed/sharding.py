@@ -1,0 +1,128 @@
+"""Logical-axis sharding: rules, contexts, and constraint helpers.
+
+Model code annotates tensors with *logical* axes ("batch", "embed",
+"heads", ...). A rule table maps logical axes to mesh axes; the active
+(mesh, rules) pair lives in a context so the same model code lowers
+unsharded on one CPU device and fully sharded on the production mesh.
+
+Indivisible dims are handled by *dropping* the offending mesh axis (e.g.
+8 KV heads can't shard over a 16-way model axis -> replicated), and a mesh
+axis is never used twice in one spec (first logical axis wins).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import math
+from typing import Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+# logical axis -> mesh axis (or tuple of mesh axes)
+Rules = dict[str, str | tuple[str, ...] | None]
+
+TRAIN_RULES: Rules = {
+    "batch": ("pod", "data"),
+    "embed": "data",          # FSDP dimension for 2-D weight sharding
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "experts": "model",
+    "vocab": "model",
+    "lora": "model",
+    "inner": "model",         # SSM/RWKV inner feature dim
+    "kv_seq": None,
+    "seq": None,
+    "seq_block": "model",     # sequence-parallel saved layer boundaries
+    "attn_q": "model",        # fallback: shard q rows when heads can't
+}
+
+SERVE_RULES: Rules = {
+    "batch": ("pod", "data"),
+    "embed": "data",
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "experts": "model",
+    "vocab": "model",
+    "lora": "model",
+    "inner": "model",
+    "kv_seq": "model",        # sequence-sharded KV caches (distributed LSE)
+    "seq": None,
+    "seq_block": None,
+    "attn_q": "model",
+}
+
+_CTX: contextvars.ContextVar[tuple[Mesh, Rules] | None] = \
+    contextvars.ContextVar("sharding_ctx", default=None)
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: Mesh | None, rules: Rules | None):
+    tok = _CTX.set((mesh, rules) if mesh is not None else None)
+    try:
+        yield
+    finally:
+        _CTX.reset(tok)
+
+
+def active() -> tuple[Mesh, Rules] | None:
+    return _CTX.get()
+
+
+def _mesh_axes_for(logical: str | None, rules: Rules):
+    if logical is None:
+        return ()
+    m = rules.get(logical, None)
+    if m is None:
+        return ()
+    return (m,) if isinstance(m, str) else tuple(m)
+
+
+def spec_for(axes: Sequence[str | None], shape: Sequence[int] | None,
+             mesh: Mesh, rules: Rules) -> PS:
+    """Build a PartitionSpec, dropping indivisible / duplicate mesh axes."""
+    used: set[str] = set()
+    entries = []
+    for i, logical in enumerate(axes):
+        mesh_axes = []
+        for ax in _mesh_axes_for(logical, rules):
+            if ax in used or ax not in mesh.shape:
+                continue
+            size = math.prod([mesh.shape[a] for a in mesh_axes + [ax]])
+            if shape is not None and shape[i] % size != 0:
+                continue
+            mesh_axes.append(ax)
+            used.add(ax)
+        entries.append(tuple(mesh_axes) if len(mesh_axes) > 1
+                       else (mesh_axes[0] if mesh_axes else None))
+    while entries and entries[-1] is None:
+        entries.pop()
+    return PS(*entries)
+
+
+def shard(x: jax.Array, *axes: str | None) -> jax.Array:
+    """Constrain ``x`` to the sharding implied by logical ``axes``."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = spec_for(axes, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def tree_shardings(axes_tree, shape_tree, mesh: Mesh, rules: Rules):
+    """NamedShardings for a whole param/cache tree.
+
+    ``axes_tree`` holds logical-axes tuples; ``shape_tree`` anything with
+    ``.shape`` leaves (ShapeDtypeStructs are fine)."""
+    return jax.tree.map(
+        lambda axes, s: NamedSharding(mesh, spec_for(axes, s.shape, mesh, rules)),
+        axes_tree, shape_tree,
+        is_leaf=lambda t: isinstance(t, tuple) and all(
+            a is None or isinstance(a, str) for a in t))
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, PS())

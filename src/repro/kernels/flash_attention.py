@@ -1,0 +1,135 @@
+"""Flash attention Pallas TPU kernel (prefill/train path).
+
+Online-softmax tiling adapted for the TPU memory hierarchy: q/k/v tiles
+are staged HBM->VMEM by BlockSpecs; the running (m, l, acc) state lives in
+VMEM scratch across the kv grid dimension; scores never touch HBM. Block
+shapes default to (128, 128) — MXU-aligned (128x128 systolic array) and
+lane-aligned (last dim multiples of 128).
+
+Grid: (batch, heads, q_blocks, kv_blocks), kv innermost so the scratch
+accumulator carries across kv steps for a fixed q block. GQA is handled
+by indexing the kv head as h // group in the BlockSpec index maps — no
+KV expansion in memory (unlike the XLA fallback path).
+
+Causal/windowed blocks that are fully masked are skipped via
+``pl.when`` on the block indices (no MXU work, no VMEM traffic for the
+skipped tiles' compute).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: int | None,
+            q_offset: int, blk_q: int, blk_k: int, n_kv_blocks: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = qi * blk_q + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 0) \
+        + q_offset
+    k_pos = ki * blk_k + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 1)
+
+    # skip blocks that are entirely masked
+    first_q = qi * blk_q + q_offset
+    last_q = first_q + blk_q - 1
+    first_k = ki * blk_k
+    run = jnp.asarray(True)
+    if causal:
+        run &= first_k <= last_q
+    if window is not None:
+        run &= (ki + 1) * blk_k - 1 > first_q - window
+
+    @pl.when(run)
+    def _block():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # (blk_q, d)
+        k = k_ref[0, 0].astype(jnp.float32)                # (blk_k, d)
+        v = v_ref[0, 0].astype(jnp.float32)                # (blk_k, dv)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))
+        mask = jnp.ones((blk_q, blk_k), dtype=bool)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(p, v)
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,            # (B, Sq, H, D)
+    k: jax.Array,            # (B, Skv, KV, D)
+    v: jax.Array,            # (B, Skv, KV, Dv)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    scale: float | None = None,
+    blk_q: int = 128,
+    blk_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Sq, H, D = q.shape
+    _, Skv, KV, Dv = v.shape
+    assert H % KV == 0
+    group = H // KV
+    scale = (1.0 / D**0.5) if scale is None else scale
+    blk_q = min(blk_q, Sq)
+    blk_k = min(blk_k, Skv)
+    assert Sq % blk_q == 0 and Skv % blk_k == 0, (Sq, blk_q, Skv, blk_k)
+    n_q, n_k = Sq // blk_q, Skv // blk_k
+
+    # (B, H, S, D) layout: block over batch/head/sequence
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    grid = (B, H, n_q, n_k)
+    kern = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        q_offset=q_offset, blk_q=blk_q, blk_k=blk_k, n_kv_blocks=n_k)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, blk_q, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, blk_k, D),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, blk_k, Dv),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, blk_q, Dv),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, 1), jnp.float32),     # running max m
+            pltpu.VMEM((blk_q, 1), jnp.float32),     # running denom l
+            pltpu.VMEM((blk_q, Dv), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,169 @@
+"""First-order recurrence Pallas TPU kernels: Mamba scan and RWKV6 scan.
+
+Both mixers are h_t = a_t * h_{t-1} + b_t recurrences (Mamba: diagonal
+state per (channel, N); RWKV6: matrix state per head with per-channel
+data-dependent decay). The kernels walk time as the innermost grid
+dimension carrying the state in VMEM scratch — the (B, S, Di, N) /
+(B, S, H, K, V) intermediates of the XLA associative-scan fallback never
+exist in HBM, which is exactly the traffic the roofline's memory term
+charges that fallback for.
+
+Tiling: channels ride the 128-lane dimension; each grid step stages a
+``blk_t``-step time tile into VMEM and walks it with an unrolled loop.
+State stays resident across the whole sequence for a fixed (batch, tile).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# --------------------------------------------------------------------------
+# Mamba selective scan
+# --------------------------------------------------------------------------
+
+def _mamba_kernel(delta_ref, dx_ref, a_ref, b_ref, c_ref, h0_ref,
+                  y_ref, hout_ref, h_scr, *, blk_t: int, n_t: int):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        h_scr[...] = h0_ref[0].astype(jnp.float32)
+
+    delta = delta_ref[0].astype(jnp.float32)   # (blk_t, blk_c)
+    dx = dx_ref[0].astype(jnp.float32)         # (blk_t, blk_c)
+    bt = b_ref[0].astype(jnp.float32)          # (blk_t, N)
+    ct = c_ref[0].astype(jnp.float32)          # (blk_t, N)
+    A = a_ref[...].astype(jnp.float32)         # (N, blk_c)
+
+    h = h_scr[...]                             # (N, blk_c)
+    ys = []
+    for t in range(blk_t):
+        a_t = jnp.exp(delta[t][None, :] * A)
+        h = a_t * h + bt[t][:, None] * dx[t][None, :]
+        ys.append(jnp.sum(h * ct[t][:, None], axis=0))
+    h_scr[...] = h
+    y_ref[0] = jnp.stack(ys).astype(y_ref.dtype)
+
+    @pl.when(ti == n_t - 1)
+    def _out():
+        hout_ref[0] = h_scr[...].astype(hout_ref.dtype)
+
+
+def mamba_scan(delta, A, Bt, Ct, x, h0=None, *, blk_t: int = 16,
+               blk_c: int = 128, interpret: bool = False):
+    """Same contract as :func:`repro.kernels.ref.mamba_scan`."""
+    B, S, Di = delta.shape
+    N = A.shape[1]
+    blk_t = min(blk_t, S)
+    blk_c = min(blk_c, Di)
+    assert S % blk_t == 0 and Di % blk_c == 0, (S, blk_t, Di, blk_c)
+    n_t, n_c = S // blk_t, Di // blk_c
+    if h0 is None:
+        h0 = jnp.zeros((B, Di, N), jnp.float32)
+
+    dx = (delta * x)
+    At = A.T                                    # (N, Di)
+    h0t = h0.transpose(0, 2, 1)                 # (B, N, Di)
+
+    kern = functools.partial(_mamba_kernel, blk_t=blk_t, n_t=n_t)
+    y, hout = pl.pallas_call(
+        kern,
+        grid=(B, n_c, n_t),
+        in_specs=[
+            pl.BlockSpec((1, blk_t, blk_c), lambda b, c, t: (b, t, c)),
+            pl.BlockSpec((1, blk_t, blk_c), lambda b, c, t: (b, t, c)),
+            pl.BlockSpec((N, blk_c), lambda b, c, t: (0, c)),
+            pl.BlockSpec((1, blk_t, N), lambda b, c, t: (b, t, 0)),
+            pl.BlockSpec((1, blk_t, N), lambda b, c, t: (b, t, 0)),
+            pl.BlockSpec((1, N, blk_c), lambda b, c, t: (b, 0, c)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, blk_t, blk_c), lambda b, c, t: (b, t, c)),
+            pl.BlockSpec((1, N, blk_c), lambda b, c, t: (b, 0, c)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, Di), x.dtype),
+            jax.ShapeDtypeStruct((B, N, Di), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, blk_c), jnp.float32)],
+        interpret=interpret,
+    )(delta, dx, At, Bt, Ct, h0t)
+    return y, hout.transpose(0, 2, 1)
+
+
+# --------------------------------------------------------------------------
+# RWKV6 scan (matrix state, data-dependent decay, bonus term)
+# --------------------------------------------------------------------------
+
+def _rwkv_kernel(r_ref, w_ref, k_ref, v_ref, u_ref, h0_ref,
+                 o_ref, hout_ref, h_scr, *, blk_t: int, n_t: int):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        h_scr[...] = h0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, 0].astype(jnp.float32)        # (blk_t, K)
+    w = w_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)        # (blk_t, V)
+    u = u_ref[0].astype(jnp.float32)           # (K,)
+
+    h = h_scr[...]                             # (K, V)
+    os_ = []
+    for t in range(blk_t):
+        kv = k[t][:, None] * v[t][None, :]
+        att = h + u[:, None] * kv
+        os_.append(jax.lax.dot(r[t][None, :], att)[0])   # (V,)
+        h = w[t][:, None] * h + kv
+    h_scr[...] = h
+    o_ref[0, 0] = jnp.stack(os_).astype(o_ref.dtype)
+
+    @pl.when(ti == n_t - 1)
+    def _out():
+        hout_ref[0, 0] = h_scr[...].astype(hout_ref.dtype)
+
+
+def rwkv_scan(r, w, k, v, u, h0=None, *, blk_t: int = 16,
+              interpret: bool = False):
+    """Same contract as :func:`repro.kernels.ref.rwkv_scan`."""
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    blk_t = min(blk_t, S)
+    assert S % blk_t == 0, (S, blk_t)
+    n_t = S // blk_t
+    if h0 is None:
+        h0 = jnp.zeros((B, H, K, V), jnp.float32)
+
+    rt, wt, kt = (t.transpose(0, 2, 1, 3) for t in (r, w, k))  # (B,H,S,K)
+    vt = v.transpose(0, 2, 1, 3)                               # (B,H,S,V)
+
+    kern = functools.partial(_rwkv_kernel, blk_t=blk_t, n_t=n_t)
+    o, hout = pl.pallas_call(
+        kern,
+        grid=(B, H, n_t),
+        in_specs=[
+            pl.BlockSpec((1, 1, blk_t, K), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, blk_t, K), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, blk_t, K), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, blk_t, V), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, K), lambda b, h, t: (h, 0)),
+            pl.BlockSpec((1, 1, K, V), lambda b, h, t: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, blk_t, V), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, K, V), lambda b, h, t: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, V), v.dtype),
+            jax.ShapeDtypeStruct((B, H, K, V), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
+        interpret=interpret,
+    )(rt, wt, kt, vt, u, h0)
+    return o.transpose(0, 2, 1, 3), hout

@@ -1,0 +1,137 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the ground truth the kernels are validated against (tests sweep
+shapes/dtypes and assert_allclose kernel-vs-ref). They favour clarity over
+memory efficiency — naive materialization is fine at test sizes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # large-negative instead of -inf: keeps softmax NaN-free
+
+
+def attention(
+    q: jax.Array,          # (B, Sq, H, D)
+    k: jax.Array,          # (B, Skv, KV, D)
+    v: jax.Array,          # (B, Skv, KV, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int | jax.Array = 0,
+    kv_len: jax.Array | None = None,   # (B,) valid kv length (decode caches)
+    scale: float | None = None,
+) -> jax.Array:
+    """Naive GQA attention. Returns (B, Sq, H, D) in q.dtype.
+
+    ``q_offset`` is the absolute position of q[0] (decode: cache length so
+    far).  ``window`` is a sliding-window size (attend to keys in
+    (pos - window, pos]).  ``kv_len`` masks out unwritten cache slots.
+    """
+    B, Sq, H, D = q.shape
+    _, Skv, KV, _ = k.shape
+    assert H % KV == 0, (H, KV)
+    G = H // KV
+    scale = (1.0 / D**0.5) if scale is None else scale
+
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # scores: (B, KV, G, Sq, Skv)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qf.reshape(B, Sq, KV, G, D), kf)
+    q_pos = jnp.arange(Sq)[:, None] + q_offset        # (Sq, 1) absolute
+    k_pos = jnp.arange(Skv)[None, :]                  # (1, Skv) absolute
+    mask = jnp.ones((Sq, Skv), dtype=bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    if kv_len is not None:
+        valid = k_pos < kv_len[:, None]               # (B, Skv)
+        s = jnp.where(valid[:, None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, vf)
+    return o.reshape(B, Sq, H, v.shape[-1]).astype(q.dtype)
+
+
+def mamba_scan(
+    delta: jax.Array,    # (B, S, Di)   post-softplus step sizes
+    A: jax.Array,        # (Di, N)      negative-real state matrix (diag)
+    Bt: jax.Array,       # (B, S, N)    input->state projection (selective)
+    Ct: jax.Array,       # (B, S, N)    state->output projection (selective)
+    x: jax.Array,        # (B, S, Di)   inner activations
+    h0: jax.Array | None = None,   # (B, Di, N) initial state
+) -> tuple[jax.Array, jax.Array]:
+    """Selective SSM scan (Mamba).  Returns (y (B,S,Di), h_final (B,Di,N)).
+
+    h_t = exp(delta_t * A) * h_{t-1} + (delta_t * x_t) B_t
+    y_t = (h_t C_t).sum(N)
+    """
+    B, S, Di = delta.shape
+    N = A.shape[1]
+    dA = jnp.exp(delta.astype(jnp.float32)[..., None] * A[None, None])   # (B,S,Di,N)
+    dBx = (delta * x).astype(jnp.float32)[..., None] * Bt.astype(jnp.float32)[:, :, None]  # (B,S,Di,N)
+    h = jnp.zeros((B, Di, N), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, t):
+        h = dA[:, t] * h + dBx[:, t]
+        y = jnp.einsum("bdn,bn->bd", h, Ct[:, t].astype(jnp.float32))
+        return h, y
+
+    h, ys = jax.lax.scan(step, h, jnp.arange(S))
+    return ys.transpose(1, 0, 2).astype(x.dtype), h
+
+
+def rwkv_scan(
+    r: jax.Array,    # (B, S, H, K)  receptance
+    w: jax.Array,    # (B, S, H, K)  per-step decay in (0,1)
+    k: jax.Array,    # (B, S, H, K)
+    v: jax.Array,    # (B, S, H, V)
+    u: jax.Array,    # (H, K)        bonus for current token
+    h0: jax.Array | None = None,     # (B, H, K, V)
+) -> tuple[jax.Array, jax.Array]:
+    """RWKV6-style linear attention with data-dependent decay.
+
+    o_t = r_t . (h_{t-1} + diag(u) k_t v_t^T);  h_t = diag(w_t) h_{t-1} + k_t v_t^T
+    Returns (o (B,S,H,V), h_final (B,H,K,V)).
+    """
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    h = jnp.zeros((B, H, K, V), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    rf, wf, kf, vf = (a.astype(jnp.float32) for a in (r, w, k, v))
+    uf = u.astype(jnp.float32)
+
+    def step(h, t):
+        kv = kf[:, t, :, :, None] * vf[:, t, :, None, :]           # (B,H,K,V)
+        o = jnp.einsum("bhk,bhkv->bhv", rf[:, t], h + uf[None, :, :, None] * kv)
+        h = wf[:, t, :, :, None] * h + kv
+        return h, o
+
+    h, os_ = jax.lax.scan(step, h, jnp.arange(S))
+    return os_.transpose(1, 0, 2, 3).astype(v.dtype), h
+
+
+def resize_bilinear(img: jax.Array, out_h: int, out_w: int) -> jax.Array:
+    """Bilinear resize, align_corners=False (OpenCV/TF convention).
+
+    img: (..., H, W, C) -> (..., out_h, out_w, C)
+    """
+    *lead, H, W, C = img.shape
+    x = img.reshape((-1, H, W, C)).astype(jnp.float32)
+
+    def axis_coords(out_n, in_n):
+        c = (jnp.arange(out_n) + 0.5) * (in_n / out_n) - 0.5
+        c = jnp.clip(c, 0.0, in_n - 1.0)
+        lo = jnp.floor(c).astype(jnp.int32)
+        hi = jnp.minimum(lo + 1, in_n - 1)
+        frac = c - lo
+        return lo, hi, frac
+
+    ylo, yhi, yf = axis_coords(out_h, H)
+    xlo, xhi, xf = axis_coords(out_w, W)
+    top = x[:, ylo][:, :, xlo] * (1 - xf)[None, None, :, None] + x[:, ylo][:, :, xhi] * xf[None, None, :, None]
+    bot = x[:, yhi][:, :, xlo] * (1 - xf)[None, None, :, None] + x[:, yhi][:, :, xhi] * xf[None, None, :, None]
+    out = top * (1 - yf)[None, :, None, None] + bot * yf[None, :, None, None]
+    return out.reshape((*lead, out_h, out_w, C)).astype(img.dtype)

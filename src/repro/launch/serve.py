@@ -1,0 +1,54 @@
+"""Serving driver CLI: batched requests through the ServingEngine with an
+AI-tax report (the paper's measurement, applied to LM serving).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \\
+        --requests 8 --max-tokens 8
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+import jax
+
+from repro.configs import get_config
+from repro.models.model import build_model
+from repro.serve.engine import Request, ServingEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--max-tokens", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--cache-len", type=int, default=96)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if args.smoke:
+        cfg = cfg.replace(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(model, params, batch_slots=args.slots,
+                        cache_len=args.cache_len)
+    rng = np.random.default_rng(0)
+    for rid in range(args.requests):
+        eng.submit(Request(rid,
+                           rng.integers(0, cfg.vocab_size, args.prompt_len),
+                           max_tokens=args.max_tokens))
+    done = eng.run()
+    print(f"served {len(done)} requests "
+          f"({sum(len(r.tokens) for r in done)} tokens)")
+    rep = eng.tax_report()
+    print(f"AI fraction {rep['ai_fraction']:.1%}  "
+          f"tax {rep['tax_fraction']:.1%}")
+    for stage, v in sorted(rep["per_stage"].items()):
+        print(f"  {stage:<10} {v*1e3:8.2f} ms")
+
+
+if __name__ == "__main__":
+    main()

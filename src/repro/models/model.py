@@ -1,0 +1,119 @@
+"""Unified model interface: build once, use for train/prefill/decode/dry-run."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec as ed
+from repro.models import transformer as tf
+from repro.models.layers import (
+    abstract_params, init_params, meta_axes,
+)
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ---- parameters ----
+    def param_meta(self):
+        return ed.encdec_meta(self.cfg) if self.cfg.encdec else tf.lm_meta(self.cfg)
+
+    def init(self, key: jax.Array, dtype=jnp.float32):
+        return init_params(self.param_meta(), key, dtype)
+
+    def abstract_params(self, dtype=jnp.float32):
+        return abstract_params(self.param_meta(), dtype)
+
+    def param_axes(self):
+        return meta_axes(self.param_meta())
+
+    def n_params(self) -> int:
+        return sum(int(jnp.prod(jnp.array(l.shape)))
+                   for l in jax.tree.leaves(self.abstract_params()))
+
+    # ---- caches ----
+    def cache_meta(self, batch: int, cache_len: int):
+        if self.cfg.encdec:
+            return ed.encdec_cache_meta(self.cfg, batch, cache_len)
+        return tf.lm_cache_meta(self.cfg, batch, cache_len)
+
+    def abstract_cache(self, batch: int, cache_len: int):
+        c = abstract_params(self.cache_meta(batch, cache_len),
+                            jnp.dtype(self.cfg.dtype))
+        return {**c, "cur_len": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    def cache_axes(self):
+        """Logical axes for the cache tree (cur_len replicated)."""
+        axes = meta_axes(self.cache_meta(2, 8))
+        return {**axes, "cur_len": ()}
+
+    def init_cache(self, batch: int, cache_len: int):
+        c = init_params(self.cache_meta(batch, cache_len),
+                        jax.random.PRNGKey(0), jnp.dtype(self.cfg.dtype))
+        return {**c, "cur_len": jnp.asarray(0, jnp.int32)}
+
+    # ---- entry points ----
+    def forward(self, params, batch):
+        """Train-mode hidden states. batch: {tokens[, frames]}."""
+        if self.cfg.encdec:
+            return ed.encdec_forward(self.cfg, params, batch["frames"],
+                                     batch["tokens"])
+        return tf.lm_forward(self.cfg, params, batch["tokens"])
+
+    def loss(self, params, batch):
+        if self.cfg.encdec:
+            hidden, aux = ed.encdec_forward(self.cfg, params, batch["frames"],
+                                            batch["tokens"])
+            return _hidden_loss(self.cfg, params, hidden, batch["labels"]) + aux
+        return tf.lm_loss(self.cfg, params, batch["tokens"], batch["labels"])
+
+    def prefill(self, params, batch, *, cache_len: int | None = None):
+        if self.cfg.encdec:
+            return ed.encdec_prefill(self.cfg, params, batch["frames"],
+                                     batch["tokens"],
+                                     cache_len=cache_len or batch["tokens"].shape[1])
+        return tf.lm_prefill(self.cfg, params, batch["tokens"],
+                             cache_len=cache_len)
+
+    def decode_step(self, params, cache, tokens):
+        if self.cfg.encdec:
+            return ed.encdec_decode_step(self.cfg, params, cache, tokens)
+        return tf.lm_decode_step(self.cfg, params, cache, tokens)
+
+    # ---- dry-run stand-ins ----
+    def input_specs(self, shape: ShapeConfig) -> dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input of this shape."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        tok = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+        emb = lambda *s: jax.ShapeDtypeStruct(s, jnp.dtype(cfg.dtype))
+        if shape.kind == "train":
+            if cfg.encdec:
+                Sd = max(S // cfg.dec_ratio, 8)
+                return {"frames": emb(B, S, cfg.d_model),
+                        "tokens": tok(B, Sd), "labels": tok(B, Sd)}
+            return {"tokens": tok(B, S), "labels": tok(B, S)}
+        if shape.kind == "prefill":
+            if cfg.encdec:
+                Sd = max(S // cfg.dec_ratio, 8)
+                return {"frames": emb(B, S, cfg.d_model), "tokens": tok(B, Sd)}
+            return {"tokens": tok(B, S)}
+        # decode: one new token against a cache of S
+        return {"tokens": tok(B, 1)}
+
+
+def _hidden_loss(cfg, params, hidden, labels):
+    logits = tf.lm_logits(cfg, params, hidden).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, jnp.clip(labels, 0)[..., None], -1)[..., 0]
+    valid = (labels >= 0).astype(jnp.float32)
+    return jnp.sum((lse - ll) * valid) / jnp.maximum(valid.sum(), 1.0)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

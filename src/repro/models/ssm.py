@@ -1,0 +1,212 @@
+"""State-space mixers: Mamba (Jamba's SSM layers) and RWKV6 time/channel mix.
+
+Both reduce to first-order diagonal recurrences executed by
+``repro.kernels.ops.{mamba_scan, rwkv_scan}`` (chunked associative scans on
+the XLA path, Pallas kernels on TPU). Decode is a single recurrence step —
+state caches are O(1) in sequence length, which is what makes these archs
+eligible for the long_500k shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.kernels import ops
+from repro.models.layers import P, groupnorm_heads
+
+
+# --------------------------------------------------------------------------
+# Mamba
+# --------------------------------------------------------------------------
+
+def _mamba_dims(cfg):
+    di = cfg.ssm_expand * cfg.d_model
+    dtr = cfg.ssm_dt_rank or max(cfg.d_model // 16, 1)
+    return di, dtr, cfg.ssm_state, cfg.ssm_conv
+
+
+def mamba_meta(cfg) -> dict:
+    d = cfg.d_model
+    di, dtr, N, K = _mamba_dims(cfg)
+    return {
+        "in_proj": P((d, 2 * di), ("embed", "inner")),
+        "conv_w": P((K, di), (None, "inner"), scale=K**-0.5),
+        "conv_b": P((di,), ("inner",), "zeros"),
+        "x_proj": P((di, dtr + 2 * N), ("inner", None)),
+        "dt_w": P((dtr, di), (None, "inner")),
+        "dt_bias": P((di,), ("inner",), "ones", dtype="float32"),
+        "A_log": P((di, N), ("inner", None), "zeros", dtype="float32"),
+        "D": P((di,), ("inner",), "ones", dtype="float32"),
+        "out_proj": P((di, d), ("inner", "embed")),
+    }
+
+
+def mamba_cache_meta(cfg, batch: int) -> dict:
+    di, dtr, N, K = _mamba_dims(cfg)
+    return {"conv": P((batch, K - 1, di), ("batch", None, "inner"), "zeros"),
+            "h": P((batch, di, N), ("batch", "inner", None), "zeros",
+                   dtype="float32")}
+
+
+def _mamba_pre(cfg, p, xz, conv_tail):
+    """Shared projection path. xz: (B, S, 2*di); returns delta, Bt, Ct, xc, z."""
+    di, dtr, N, K = _mamba_dims(cfg)
+    x_in, z = xz[..., :di], xz[..., di:]
+    xw = jnp.concatenate([conv_tail, x_in], axis=1)      # causal depthwise conv
+    # (B, S+K-1, di) -> windows: sum_k conv_w[k] * x[t+k]
+    xc = sum(xw[:, k:k + x_in.shape[1]] * p["conv_w"][k].astype(xw.dtype)
+             for k in range(K))
+    xc = jax.nn.silu(xc + p["conv_b"].astype(xc.dtype))
+    xdb = xc @ p["x_proj"]
+    delta = jax.nn.softplus(xdb[..., :dtr] @ p["dt_w"]
+                            + p["dt_bias"].astype(xdb.dtype))
+    Bt, Ct = xdb[..., dtr:dtr + N], xdb[..., dtr + N:]
+    return delta, Bt, Ct, xc, z, x_in
+
+
+def mamba_apply(cfg, p, x, h0=None, conv_tail=None, return_cache=False):
+    """x: (B, S, d). Returns y or (y, cache)."""
+    B, S, _ = x.shape
+    di, dtr, N, K = _mamba_dims(cfg)
+    xz = x @ p["in_proj"]
+    xz = shard(xz, "batch", "seq", "inner")
+    if conv_tail is None:
+        conv_tail = jnp.zeros((B, K - 1, di), xz.dtype)
+    delta, Bt, Ct, xc, z, x_in = _mamba_pre(cfg, p, xz, conv_tail)
+    A = -jnp.exp(p["A_log"])
+    y, h = ops.mamba_scan(delta, A, Bt, Ct, xc, h0)
+    y = y + xc * p["D"].astype(y.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    if not return_cache:
+        return out
+    tail = jnp.concatenate([conv_tail, x_in], axis=1)[:, -(K - 1):]
+    return out, {"conv": tail, "h": h}
+
+
+def mamba_decode(cfg, p, x, cache):
+    """x: (B, 1, d); cache: {conv (B,K-1,di), h (B,di,N)}."""
+    di, dtr, N, K = _mamba_dims(cfg)
+    xz = x @ p["in_proj"]
+    delta, Bt, Ct, xc, z, x_in = _mamba_pre(cfg, p, xz, cache["conv"])
+    A = -jnp.exp(p["A_log"])
+    y, h = ops.mamba_decode_step(delta[:, 0], A, Bt[:, 0], Ct[:, 0],
+                                 xc[:, 0], cache["h"])
+    y = y[:, None] + xc * p["D"].astype(y.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    tail = jnp.concatenate([cache["conv"], x_in], axis=1)[:, 1:]
+    return out, {"conv": tail, "h": h}
+
+
+# --------------------------------------------------------------------------
+# RWKV6 (Finch) — time-mix with data-dependent decay + channel-mix FFN
+# --------------------------------------------------------------------------
+
+def _rwkv_dims(cfg):
+    K = cfg.rwkv_head_dim
+    H = cfg.d_model // K
+    return H, K
+
+
+def rwkv_meta(cfg) -> dict:
+    d = cfg.d_model
+    H, K = _rwkv_dims(cfg)
+    da = H * K
+    lora = 64
+    return {
+        "mu": P((5, d), (None, "embed"), "zeros"),    # r,w,k,v,g token-shift mixes
+        "wr": P((d, da), ("embed", "inner")),
+        "wk": P((d, da), ("embed", "inner")),
+        "wv": P((d, da), ("embed", "inner")),
+        "wg": P((d, da), ("embed", "inner")),
+        "w0": P((da,), ("inner",), "zeros", dtype="float32"),
+        "w1": P((d, lora), ("embed", None)),
+        "w2": P((lora, da), (None, "inner"), scale=0.01),
+        "u": P((H, K), (None, None), "zeros", dtype="float32"),
+        "gn_w": P((da,), ("inner",), "ones", dtype="float32"),
+        "gn_b": P((da,), ("inner",), "zeros", dtype="float32"),
+        "wo": P((da, d), ("inner", "embed")),
+    }
+
+
+def rwkv_cm_meta(cfg) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {"mu": P((2, d), (None, "embed"), "zeros"),   # k, r mixes
+            "wk": P((d, f), ("embed", "mlp")),
+            "wv": P((f, d), ("mlp", "embed")),
+            "wr": P((d, d), ("embed", None))}
+
+
+def rwkv_cache_meta(cfg, batch: int) -> dict:
+    H, K = _rwkv_dims(cfg)
+    d = cfg.d_model
+    return {"x_tm": P((batch, d), ("batch", "embed"), "zeros"),
+            "x_cm": P((batch, d), ("batch", "embed"), "zeros"),
+            "h": P((batch, H, K, K), ("batch", None, None, None), "zeros",
+                   dtype="float32")}
+
+
+def _shift(x, x_prev):
+    """Previous-token tensor: (B,S,d) shifted right, first slot = x_prev."""
+    return jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+
+
+def _lerp(x, xp, mu):
+    return x + (xp - x) * mu.astype(x.dtype)
+
+
+def _rwkv_project(cfg, p, x, xp):
+    B, S, d = x.shape
+    H, K = _rwkv_dims(cfg)
+    r = _lerp(x, xp, p["mu"][0]) @ p["wr"]
+    xw = _lerp(x, xp, p["mu"][1])
+    k = _lerp(x, xp, p["mu"][2]) @ p["wk"]
+    v = _lerp(x, xp, p["mu"][3]) @ p["wv"]
+    g = jax.nn.silu(_lerp(x, xp, p["mu"][4]) @ p["wg"])
+    w = jnp.exp(-jnp.exp(
+        p["w0"] + (jnp.tanh(xw @ p["w1"]) @ p["w2"]).astype(jnp.float32)))
+    shp = (B, S, H, K)
+    return (r.reshape(shp), w.reshape(shp), k.reshape(shp),
+            v.reshape(shp), g)
+
+
+def rwkv_apply(cfg, p, x, h0=None, x_prev=None, return_cache=False):
+    B, S, d = x.shape
+    H, K = _rwkv_dims(cfg)
+    if x_prev is None:
+        x_prev = jnp.zeros((B, d), x.dtype)
+    r, w, k, v, g = _rwkv_project(cfg, p, x, _shift(x, x_prev))
+    o, h = ops.rwkv_scan(r, w, k, v, p["u"], h0)
+    o = groupnorm_heads(o, p["gn_w"].reshape(H, K), p["gn_b"].reshape(H, K))
+    out = (o.reshape(B, S, H * K) * g) @ p["wo"]
+    if not return_cache:
+        return out
+    return out, {"x_tm": x[:, -1], "h": h}
+
+
+def rwkv_decode(cfg, p, x, cache):
+    """x: (B, 1, d)."""
+    B, _, d = x.shape
+    H, K = _rwkv_dims(cfg)
+    r, w, k, v, g = _rwkv_project(cfg, p, x, cache["x_tm"][:, None])
+    o, h = ops.rwkv_decode_step(r[:, 0], w[:, 0], k[:, 0], v[:, 0],
+                                p["u"], cache["h"])
+    o = groupnorm_heads(o, p["gn_w"].reshape(H, K), p["gn_b"].reshape(H, K))
+    out = (o.reshape(B, 1, H * K) * g) @ p["wo"]
+    return out, {"x_tm": x[:, 0], "h": h}
+
+
+def rwkv_cm_apply(cfg, p, x, x_prev=None):
+    B, S, d = x.shape
+    if x_prev is None:
+        x_prev = jnp.zeros((B, d), x.dtype)
+    xp = _shift(x, x_prev)
+    k = jnp.square(jax.nn.relu(_lerp(x, xp, p["mu"][0]) @ p["wk"]))
+    return jax.nn.sigmoid(_lerp(x, xp, p["mu"][1]) @ p["wr"]) * (k @ p["wv"])
+
+
+def rwkv_cm_decode(cfg, p, x, x_prev):
+    k = jnp.square(jax.nn.relu(_lerp(x, x_prev[:, None], p["mu"][0]) @ p["wk"]))
+    return jax.nn.sigmoid(_lerp(x, x_prev[:, None], p["mu"][1]) @ p["wr"]) * (k @ p["wv"])

@@ -1,0 +1,381 @@
+"""Trip-count-aware cost analysis of optimized HLO text.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE, which silently
+undercounts every scanned-layer model by its depth (and collectives inside
+the scan by the same factor). This walker parses the post-partitioning HLO
+module, computes per-computation costs (dot FLOPs, elementwise FLOPs,
+HBM-boundary bytes, collective bytes by kind), and rolls them up through
+the call graph: ``while`` multiplies by its ``known_trip_count``,
+fusions/calls add their callee once.
+
+Scope notes:
+  * dot FLOPs are exact (2 * prod(out) * prod(contracted lhs dims)).
+  * elementwise FLOPs cover the common float ops (1 flop/elem) — this is
+    what makes SSM/RWKV scans visible, which are elementwise-dominated.
+  * bytes are an HBM-traffic model: operands + outputs at fusion/call-site
+    boundaries (internals of a fusion are on-chip).
+  * collective bytes use the op's full (gathered) shape for all-gather /
+    all-reduce; reduce-scatter/all-to-all use operand bytes when known.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "tanh", "rsqrt", "sqrt", "log", "negate", "abs",
+    "exponential-minus-one", "log-plus-one", "logistic", "select", "floor",
+    "ceil", "round-nearest-afz", "cosine", "sine", "sign",
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(r"^((?:\([^)]*\)|[\w\[\],{}\- ])*?)\s*([\w\-]+)\(")
+_OPERANDS_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLEE_RE = re.compile(r"(?:body|to_apply|calls)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+
+
+def _shape_info(type_str: str):
+    """(elements, bytes) summed over every tensor literal in the string."""
+    elems = byts = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dt]
+    return elems, byts
+
+
+@dataclass
+class Cost:
+    dot_flops: float = 0.0
+    ew_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    flash_bytes: float = 0.0   # subset of hbm_bytes inside "flashable_*"
+    #                            named scopes (regions a Pallas kernel fuses)
+    coll: dict = field(default_factory=lambda: {k: 0.0 for k in _COLL_KINDS})
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.dot_flops += other.dot_flops * mult
+        self.ew_flops += other.ew_flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.flash_bytes += other.flash_bytes * mult
+        for k in _COLL_KINDS:
+            self.coll[k] += other.coll[k] * mult
+
+    @property
+    def flops(self) -> float:
+        return self.dot_flops + self.ew_flops
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll.values())
+
+    def to_dict(self) -> dict:
+        return {"dot_flops": self.dot_flops, "ew_flops": self.ew_flops,
+                "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+                "coll_bytes": self.coll_bytes, "coll": dict(self.coll)}
+
+
+@dataclass
+class _Comp:
+    name: str
+    lines: list
+    symbols: dict           # op name -> type string
+    local: Cost | None = None
+    calls: list = None      # (callee, mult) pairs
+
+
+def _split_computations(text: str) -> dict[str, _Comp]:
+    comps: dict[str, _Comp] = {}
+    cur = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if cur is None:
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)$", s)
+            if m and s.endswith("{"):
+                name = m.group(1)
+                cur = _Comp(name=name, lines=[], symbols={}, calls=[])
+                if raw.lstrip().startswith("ENTRY"):
+                    cur.is_entry = True
+                # header params: "a.1: f32[8,16], b: (s32[], f32[2])"
+                hdr = s[s.index("(") + 1:]
+                for pm in re.finditer(r"([\w.\-]+)\s*:\s*((?:\([^)]*\)|[\w\[\],{} ]+))",
+                                      hdr):
+                    cur.symbols[pm.group(1)] = pm.group(2)
+                comps[name] = cur
+            continue
+        if s == "}":
+            cur = None
+            continue
+        cur.lines.append(s)
+        dm = _DEF_RE.match(s)
+        if dm:
+            cur.symbols[dm.group(1)] = dm.group(2)
+    return comps
+
+
+def _dot_flops(line: str, out_elems: int, symbols: dict) -> float:
+    m = re.search(r"dot\(\s*%([\w.\-]+)", line)
+    k = 1
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    if m and cm and m.group(1) in symbols:
+        sh = _SHAPE_RE.search(symbols[m.group(1)])
+        if sh and sh.group(2):
+            dims = [int(d) for d in sh.group(2).split(",")]
+            for ci in cm.group(1).split(","):
+                if ci:
+                    idx = int(ci)
+                    if idx < len(dims):
+                        k *= dims[idx]
+    return 2.0 * out_elems * k
+
+
+def _fusion_traffic(callee: _Comp, out_elems: int, out_bytes: int):
+    """Slice-aware HBM traffic of a fusion.
+
+    Scan bodies address their carries with dynamic-slice (read one layer
+    of a stacked buffer) and dynamic-update-slice (write one layer back,
+    aliased in place). Charging the full stacked operand/output per
+    iteration over-counts by the layer count, so:
+      * a param whose only use is a dynamic-slice charges the slice;
+      * a root that is a DUS (possibly wrapped in XLA:CPU's bf16
+        legalization converts) charges the update slice as the output.
+    Returns (in_bytes, out_bytes) or None if the callee is unparseable."""
+    if not callee.lines:
+        return None
+    # ---- output side ----
+    root = None
+    for line in callee.lines:
+        if line.startswith("ROOT"):
+            root = line
+            break
+    if root is None:
+        return None
+    out_traffic = float(out_bytes)
+    target = root
+    if " convert(" in root:
+        ops = _OPERANDS_RE.findall(root[root.index(" convert("):])
+        if ops and ops[0] in callee.symbols:
+            target = callee.symbols[ops[0]]
+    if "dynamic-update-slice(" in target:
+        ops = _OPERANDS_RE.findall(
+            target[target.index("dynamic-update-slice("):])
+        if len(ops) >= 2:
+            upd_elems, _ = _shape_info(callee.symbols.get(ops[1], ""))
+            elt = (out_bytes / out_elems) if out_elems else 4.0
+            out_traffic = upd_elems * elt
+    # ---- input side ----
+    sliced_params: dict[str, float] = {}
+    param_bytes: dict[str, float] = {}
+    alias_src: dict[str, str] = {}      # convert/bitcast chains
+    for line in callee.lines:
+        dm = _DEF_RE.match(line)
+        if not dm:
+            continue
+        name, rest = dm.group(1), dm.group(2)
+        if " parameter(" in rest:
+            param_bytes[name] = _shape_info(rest)[1]
+            continue
+        ops = _OPERANDS_RE.findall(rest)
+        if (" convert(" in rest or " bitcast(" in rest
+                or " copy(" in rest or " reshape(" in rest) and ops:
+            alias_src[name] = ops[0]
+
+    def root_param(name: str) -> str | None:
+        seen = 0
+        while name in alias_src and seen < 10:
+            name = alias_src[name]
+            seen += 1
+        return name if name in param_bytes else None
+
+    for line in callee.lines:
+        dm = _DEF_RE.match(line)
+        if not dm:
+            continue
+        rest = dm.group(2)
+        if "dynamic-update-slice(" in rest:
+            # the buffer operand of a DUS aliases in place: no read traffic
+            ops = _OPERANDS_RE.findall(
+                rest[rest.index("dynamic-update-slice("):])
+            src = root_param(ops[0]) if ops else None
+            if src is not None:
+                sliced_params[src] = 0.0
+        elif "dynamic-slice(" in rest:
+            ops = _OPERANDS_RE.findall(rest[rest.index("dynamic-slice("):])
+            src = root_param(ops[0]) if ops else None
+            if src is not None:
+                sliced_params[src] = min(
+                    sliced_params.get(src, float("inf")),
+                    float(_shape_info(rest)[1]))
+    root_is_dus = "dynamic-update-slice(" in target
+    in_traffic = 0.0
+    for name, b in param_bytes.items():
+        if root_is_dus:
+            # scatter-update fusion: real reads are the slices it touches;
+            # full-size untouched params are aliased carry buffers (and
+            # XLA:CPU's bf16<->f32 legalization doubles of them).
+            in_traffic += sliced_params.get(name, 0.0)
+        else:
+            in_traffic += sliced_params.get(name, b)
+    if root_is_dus:
+        in_traffic += out_traffic          # the update values themselves
+    return in_traffic, out_traffic
+
+
+def _analyze_comp(comp: _Comp, comps: dict | None = None):
+    cost = Cost()
+    calls = []
+    for line in comp.lines:
+        dm = _DEF_RE.match(line)
+        if not dm:
+            continue
+        rest = dm.group(2)
+        om = _OPCODE_RE.match(rest)
+        if not om:
+            continue
+        type_str, opcode = om.group(1), om.group(2)
+        out_elems, out_bytes = _shape_info(type_str)
+        opc = opcode.lower()
+        base = opc.replace("-start", "").replace("-done", "")
+        if base in _COLL_KINDS:
+            if opc.endswith("-done"):
+                continue
+            byts = out_bytes
+            if base in ("reduce-scatter", "all-to-all"):
+                ops = _OPERANDS_RE.findall(rest[len(om.group(0)):])
+                in_bytes = sum(_shape_info(comp.symbols.get(o, ""))[1]
+                               for o in ops[:1])
+                byts = max(byts, in_bytes)
+            cost.coll[base] += byts
+            cost.hbm_bytes += out_bytes
+            continue
+        if opc == "while":
+            trip = 1
+            tm = _TRIP_RE.search(line)
+            if tm:
+                trip = int(tm.group(1))
+            body = _CALLEE_RE.search(line)
+            cond = _COND_RE.search(line)
+            if body:
+                calls.append((body.group(1), trip))
+            if cond:
+                calls.append((cond.group(1), trip))
+            continue
+        if opc in ("call", "fusion", "custom-call", "reduce", "sort", "map",
+                   "reduce-window", "scatter", "select-and-scatter",
+                   "conditional", "async-start"):
+            for cm_ in re.finditer(r"(?:to_apply|calls|body)=%?([\w.\-]+)", line):
+                calls.append((cm_.group(1), 1))
+            for cm_ in re.finditer(r"branch_computations=\{([^}]*)\}", line):
+                for c in _OPERANDS_RE.findall(cm_.group(1)):
+                    calls.append((c, 1))
+            # HBM boundary: operands + outputs, slice-aware for fusions
+            # (scan carries / KV-cache updates alias in place and read
+            # one-layer slices of stacked buffers).
+            byts = None
+            if opc == "fusion" and comps is not None:
+                cal = _CALLEE_RE.search(line)
+                callee = comps.get(cal.group(1)) if cal else None
+                if callee is not None:
+                    tr = _fusion_traffic(callee, out_elems, out_bytes)
+                    if tr is not None:
+                        byts = tr[0] + tr[1]
+            if byts is None:
+                ops = _OPERANDS_RE.findall(rest[len(om.group(0)):])
+                in_bytes = sum(_shape_info(comp.symbols.get(o, ""))[1]
+                               for o in ops)
+                byts = out_bytes + in_bytes
+            cost.hbm_bytes += byts
+            if "flashable" in line:
+                cost.flash_bytes += byts
+            if opc == "reduce":
+                cost.ew_flops += out_elems  # rough
+            continue
+        if opc in ("dot", "dot-general"):
+            cost.dot_flops += _dot_flops(rest, out_elems, comp.symbols)
+            ops = _OPERANDS_RE.findall(rest[len(om.group(0)):])
+            in_bytes = sum(_shape_info(comp.symbols.get(o, ""))[1]
+                           for o in ops)
+            cost.hbm_bytes += out_bytes + in_bytes
+            if "flashable" in line:
+                cost.flash_bytes += out_bytes + in_bytes
+            continue
+        if opc == "convolution":
+            # flops ~ 2 * out_elems * (in_channels * kernel_spatial)
+            cost.dot_flops += 2.0 * out_elems  # lower bound; convs are stubs
+            cost.hbm_bytes += out_bytes
+            continue
+        if opc in _ELEMENTWISE:
+            cost.ew_flops += out_elems
+            # elementwise at computation top level = one fused kernel anyway;
+            # only count boundary bytes for large ops to avoid double count
+            continue
+        if opc in ("copy", "transpose", "reshape", "broadcast", "concatenate",
+                   "slice", "dynamic-slice", "dynamic-update-slice", "gather",
+                   "pad", "iota", "convert", "bitcast", "bitcast-convert",
+                   "reverse"):
+            # copy/convert are CPU-lowering artifacts TPU fuses away; the
+            # rest genuinely move data through HBM.
+            if opc == "dynamic-update-slice":
+                # in-place: traffic = the update slice (2nd operand), r+w
+                ops = _OPERANDS_RE.findall(rest[len(om.group(0)):])
+                upd = (_shape_info(comp.symbols.get(ops[1], ""))[1]
+                       if len(ops) > 1 else out_bytes)
+                cost.hbm_bytes += 2.0 * upd
+                if "flashable" in line:
+                    cost.flash_bytes += 2.0 * upd
+            elif opc in ("transpose", "concatenate", "gather", "pad"):
+                cost.hbm_bytes += 2.0 * out_bytes
+                if "flashable" in line:
+                    cost.flash_bytes += 2.0 * out_bytes
+            continue
+    comp.local = cost
+    comp.calls = calls
+
+
+def analyze(hlo_text: str) -> Cost:
+    comps = _split_computations(hlo_text)
+    for c in comps.values():
+        _analyze_comp(c, comps)
+    entry = None
+    for c in comps.values():
+        if getattr(c, "is_entry", False):
+            entry = c
+    if entry is None:  # fall back: last computation
+        entry = list(comps.values())[-1]
+
+    memo: dict[str, Cost] = {}
+
+    def total(name: str) -> Cost:
+        if name in memo:
+            return memo[name]
+        comp = comps.get(name)
+        out = Cost()
+        if comp is None:
+            return out
+        memo[name] = out           # break cycles defensively
+        out.add(comp.local)
+        for callee, mult in comp.calls:
+            out.add(total(callee), mult)
+        return out
+
+    return total(entry.name)

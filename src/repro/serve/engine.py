@@ -1,0 +1,104 @@
+"""Batched serving engine: continuous-batching decode over a KV cache.
+
+Production concerns covered at container scale:
+  * request queue with admission to fixed batch slots (continuous
+    batching: a finished slot is refilled on the next step, no global
+    drain);
+  * prefill-on-admit, decode in lock-step across slots;
+  * per-request AI-tax events (queue wait, prefill, per-token decode) via
+    the same EventLog as the paper's pipeline;
+  * straggler mitigation hook: slots exceeding ``max_tokens`` are evicted.
+
+The engine is model-agnostic: any ``repro.models.model.Model`` works. On
+the container it runs tiny configs on CPU; the step functions are the
+same ones the dry-run lowers for the production mesh.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.events import EventLog
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (S,) int32
+    max_tokens: int = 16
+    t_submit: float = 0.0
+    tokens: list = field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, model, params, *, batch_slots: int = 4,
+                 cache_len: int = 128, greedy: bool = True):
+        self.model = model
+        self.params = params
+        self.slots = batch_slots
+        self.cache_len = cache_len
+        self.log = EventLog()
+        self.queue: list[Request] = []
+        self.active: list[Request | None] = [None] * batch_slots
+        self.greedy = greedy
+        self._decode = jax.jit(model.decode_step)
+
+    def submit(self, req: Request) -> None:
+        req.t_submit = time.perf_counter()
+        self.queue.append(req)
+
+    # -- single-sequence prefill per admit; decode batched over slots ------
+    def _prefill_one(self, req: Request):
+        t0 = time.perf_counter()
+        tokens = jnp.asarray(req.prompt[None, :])
+        logits, cache = self.model.prefill(self.params, {"tokens": tokens},
+                                           cache_len=self.cache_len)
+        jax.block_until_ready(logits)
+        self.log.log(req.rid, "prefill", t0, time.perf_counter(),
+                     int(req.prompt.nbytes))
+        nxt = int(jnp.argmax(logits[0]))
+        req.tokens.append(nxt)
+        return cache, nxt
+
+    def run(self, max_steps: int = 512) -> list[Request]:
+        """Processes the queue to completion (or step limit)."""
+        finished: list[Request] = []
+        caches: list = [None] * self.slots
+        steps = 0
+        while (any(self.active) or self.queue) and steps < max_steps:
+            # admit
+            for i in range(self.slots):
+                if self.active[i] is None and self.queue:
+                    req = self.queue.pop(0)
+                    self.log.log(req.rid, "wait", req.t_submit,
+                                 time.perf_counter())
+                    caches[i], _ = self._prefill_one(req)
+                    self.active[i] = req
+            # lock-step decode over occupied slots
+            for i, req in enumerate(self.active):
+                if req is None:
+                    continue
+                t0 = time.perf_counter()
+                tok = jnp.asarray([[req.tokens[-1]]], jnp.int32)
+                logits, caches[i] = self._decode(self.params, caches[i], tok)
+                jax.block_until_ready(logits)
+                self.log.log(req.rid, "decode", t0, time.perf_counter())
+                nxt = int(jnp.argmax(logits[0]))
+                req.tokens.append(nxt)
+                at_cap = int(caches[i]["cur_len"]) >= self.cache_len - 1
+                if len(req.tokens) >= req.max_tokens or at_cap:
+                    req.done = True
+                    finished.append(req)
+                    self.active[i] = None
+                    caches[i] = None
+            steps += 1
+        return finished
+
+    def tax_report(self) -> dict:
+        return self.log.ai_tax(ai_stages={"prefill", "decode"})

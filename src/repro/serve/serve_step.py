@@ -1,0 +1,63 @@
+"""Serving-step factories: prefill and single-token decode under shardings.
+
+Decode is the latency-critical path the paper's AI-tax analysis targets:
+the KV cache is donated (updated in place) and sequence-sharded under the
+serve rules so cache softmax lowers to distributed-LSE partial reductions.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+from repro.distributed import sharding as shd
+from repro.models.model import Model
+
+
+@dataclass(frozen=True)
+class ServeShardings:
+    params: Any
+    cache: Any
+    mesh: Mesh
+    rules: shd.Rules
+
+
+def make_serve_shardings(model: Model, mesh: Mesh, batch: int, cache_len: int,
+                         rules: shd.Rules | None = None) -> ServeShardings:
+    rules = rules or shd.SERVE_RULES
+    psh = shd.tree_shardings(model.param_axes(), model.abstract_params(),
+                             mesh, rules)
+    cax = model.cache_axes()
+    cabs = model.abstract_cache(batch, cache_len)
+    csh = shd.tree_shardings(cax, cabs, mesh, rules)
+    return ServeShardings(psh, csh, mesh, rules)
+
+
+def make_prefill(model: Model, sh: ServeShardings, cache_len: int):
+    def prefill(params, batch):
+        with shd.use_sharding(sh.mesh, sh.rules):
+            return model.prefill(params, batch, cache_len=cache_len)
+    return prefill
+
+
+def make_decode_step(model: Model, sh: ServeShardings):
+    def decode_step(params, cache, tokens):
+        with shd.use_sharding(sh.mesh, sh.rules):
+            return model.decode_step(params, cache, tokens)
+    return decode_step
+
+
+def jit_decode_step(model: Model, sh: ServeShardings, batch: int):
+    tok_sh = NamedSharding(sh.mesh, shd.spec_for(("batch", None), (batch, 1),
+                                                 sh.mesh, sh.rules))
+    logit_sh = NamedSharding(sh.mesh, shd.spec_for(
+        ("batch", "vocab"), (batch, model.cfg.vocab_size), sh.mesh, sh.rules))
+    return jax.jit(
+        make_decode_step(model, sh),
+        in_shardings=(sh.params, sh.cache, tok_sh),
+        out_shardings=(logit_sh, sh.cache),
+        donate_argnums=(1,),
+    )

@@ -1,0 +1,81 @@
+"""AdamW with global-norm clipping and schedules — pure JAX, no optax.
+
+Optimizer state (m, v) mirrors the parameter tree, so the same sharding
+specs apply leaf-for-leaf (ZeRO-style sharded states fall out of the
+2-D parameter sharding for free).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+class OptState(NamedTuple):
+    m: Any
+    v: Any
+    count: jax.Array
+
+
+def init_opt_state(params) -> OptState:
+    z = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return OptState(m=z, v=jax.tree.map(jnp.copy, z),
+                    count=jnp.zeros((), jnp.int32))
+
+
+def schedule(hp: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = step / max(hp.warmup_steps, 1)
+    prog = jnp.clip((step - hp.warmup_steps)
+                    / max(hp.total_steps - hp.warmup_steps, 1), 0.0, 1.0)
+    cos = hp.min_lr_ratio + (1 - hp.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return hp.lr * jnp.where(step < hp.warmup_steps, warm, cos)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, opt: OptState, params, hp: AdamWConfig):
+    """Returns (new_params, new_opt, grad_norm)."""
+    count = opt.count + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, hp.clip_norm / (gnorm + 1e-9))
+    lr = schedule(hp, count)
+    b1c = 1 - hp.b1 ** count.astype(jnp.float32)
+    b2c = 1 - hp.b2 ** count.astype(jnp.float32)
+
+    def leaf(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = hp.b1 * m + (1 - hp.b1) * g
+        v = hp.b2 * v + (1 - hp.b2) * jnp.square(g)
+        upd = (m / b1c) / (jnp.sqrt(v / b2c) + hp.eps)
+        if p.ndim >= 2:          # decoupled weight decay on matrices only
+            upd = upd + hp.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * upd).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt.m)
+    flat_v = treedef.flatten_up_to(opt.v)
+    out = [leaf(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, OptState(new_m, new_v, count), gnorm

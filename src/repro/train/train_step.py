@@ -1,0 +1,103 @@
+"""Train-step factory: loss + grads + AdamW under explicit shardings.
+
+``make_train_fns`` returns (train_step, shardings) where shardings carry
+NamedShardings for params/opt/batch so callers can jit with explicit
+in/out shardings (and the dry-run can ``.lower().compile()`` against
+ShapeDtypeStructs without allocating anything).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+from repro.distributed import sharding as shd
+from repro.models.model import Model
+from repro.train.optimizer import AdamWConfig, OptState, adamw_update, init_opt_state
+
+
+@dataclass(frozen=True)
+class TrainShardings:
+    params: Any
+    opt: Any
+    batch: Any
+    mesh: Mesh
+    rules: shd.Rules
+
+
+def batch_shardings(model: Model, specs: dict, mesh: Mesh, rules: shd.Rules):
+    def one(name, s):
+        if name == "frames":
+            return NamedSharding(mesh, shd.spec_for(
+                ("batch", None, None), s.shape, mesh, rules))
+        return NamedSharding(mesh, shd.spec_for(
+            ("batch",) + (None,) * (len(s.shape) - 1), s.shape, mesh, rules))
+    return {k: one(k, v) for k, v in specs.items()}
+
+
+def make_train_shardings(model: Model, mesh: Mesh,
+                         rules: shd.Rules | None = None,
+                         batch_specs: dict | None = None) -> TrainShardings:
+    rules = rules or shd.TRAIN_RULES
+    axes = model.param_axes()
+    aparams = model.abstract_params()
+    psh = shd.tree_shardings(axes, aparams, mesh, rules)
+    osh = OptState(m=psh, v=psh, count=NamedSharding(mesh, PS()))
+    bsh = (batch_shardings(model, batch_specs, mesh, rules)
+           if batch_specs else None)
+    return TrainShardings(psh, osh, bsh, mesh, rules)
+
+
+def make_train_step(model: Model, hp: AdamWConfig, sh: TrainShardings,
+                    *, grad_accum: int = 1):
+    """Returns train_step(params, opt, batch) -> (params, opt, metrics).
+
+    ``grad_accum > 1`` splits the global batch into microbatches and
+    accumulates gradients through a scan — the standard lever for fitting
+    activation memory at large global batch (each microbatch's activations
+    are freed before the next), at the cost of serializing compute."""
+
+    def grads_of(params, batch):
+        if grad_accum == 1:
+            return jax.value_and_grad(model.loss)(params, batch)
+
+        def micro(i, b):
+            return jax.tree.map(
+                lambda t: t.reshape(grad_accum, -1, *t.shape[1:])[i], b)
+
+        def body(carry, i):
+            acc_loss, acc_g = carry
+            loss, g = jax.value_and_grad(model.loss)(params, micro(i, batch))
+            return (acc_loss + loss,
+                    jax.tree.map(jnp.add, acc_g, g)), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+        (loss, g), _ = jax.lax.scan(body, (jnp.zeros(()), zeros),
+                                    jnp.arange(grad_accum))
+        scale = 1.0 / grad_accum
+        return loss * scale, jax.tree.map(lambda t: t * scale, g)
+
+    def train_step(params, opt, batch):
+        with shd.use_sharding(sh.mesh, sh.rules):
+            loss, grads = grads_of(params, batch)
+            params, opt, gnorm = adamw_update(grads, opt, params, hp)
+        return params, opt, {"loss": loss, "grad_norm": gnorm,
+                             "step": opt.count}
+
+    return train_step
+
+
+def jit_train_step(model: Model, hp: AdamWConfig, sh: TrainShardings):
+    step = make_train_step(model, hp, sh)
+    return jax.jit(
+        step,
+        in_shardings=(sh.params, sh.opt, sh.batch),
+        out_shardings=(sh.params, sh.opt,
+                       NamedSharding(sh.mesh, PS())),
+        donate_argnums=(0, 1),
+    )

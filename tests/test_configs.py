@@ -1,0 +1,95 @@
+"""Config-registry integrity: the published numbers, verbatim."""
+import pytest
+
+from repro.configs import ARCHS, SHAPES, get_config, list_configs, supports_shape
+
+
+def test_registry_lists_all_ten():
+    assert len(list_configs()) == 10
+
+
+EXPECTED = {
+    # arch: (L, d_model, H, kv, d_ff, vocab)
+    "llama3-8b": (32, 4096, 32, 8, 14336, 128256),
+    "qwen2.5-14b": (48, 5120, 40, 8, 13824, 152064),
+    "gemma3-12b": (48, 3840, 16, 8, 15360, 262144),
+    "qwen1.5-110b": (80, 8192, 64, 8, 49152, 152064),
+    "chameleon-34b": (48, 8192, 64, 8, 22016, 65536),
+    "whisper-large-v3": (32, 1280, 20, 20, 5120, 51866),
+    "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+    "rwkv6-3b": (32, 2560, 40, 40, 8960, 65536),
+    "granite-moe-3b-a800m": (32, 1536, 24, 8, 512, 49155),
+    "deepseek-v2-236b": (60, 5120, 128, 128, 1536, 102400),
+}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_published_dimensions(arch):
+    cfg = get_config(arch)
+    L, d, H, kv, ff, V = EXPECTED[arch]
+    assert cfg.n_layers == L and cfg.d_model == d
+    assert cfg.n_heads == H and cfg.n_kv_heads == kv
+    assert cfg.d_ff == ff and cfg.vocab_size == V
+
+
+def test_moe_configs():
+    j = get_config("jamba-v0.1-52b").moe
+    assert (j.n_experts, j.top_k) == (16, 2)
+    g = get_config("granite-moe-3b-a800m").moe
+    assert (g.n_experts, g.top_k) == (40, 8)
+    d = get_config("deepseek-v2-236b").moe
+    assert (d.n_experts, d.top_k, d.n_shared) == (160, 6, 2)
+
+
+def test_mla_config():
+    m = get_config("deepseek-v2-236b").mla
+    assert m.kv_lora == 512 and m.qk_rope == 64
+
+
+def test_block_patterns():
+    g = get_config("gemma3-12b").block_pattern
+    assert len(g) == 6 and sum(s.window is not None for s in g) == 5
+    j = get_config("jamba-v0.1-52b").block_pattern
+    assert len(j) == 8
+    assert sum(s.kind == "attn" for s in j) == 1          # 1:7 interleave
+    assert sum(s.moe for s in j) == 4                     # every other layer
+    r = get_config("rwkv6-3b").block_pattern
+    assert all(s.kind == "rwkv" for s in r)
+
+
+def test_qkv_bias_flags():
+    assert get_config("qwen2.5-14b").qkv_bias
+    assert get_config("qwen1.5-110b").qkv_bias
+    assert not get_config("llama3-8b").qkv_bias
+
+
+def test_long_context_support_matrix():
+    runs_long = {a for a in ARCHS if supports_shape(get_config(a), "long_500k")}
+    assert runs_long == {"gemma3-12b", "jamba-v0.1-52b", "rwkv6-3b"}
+    for a in ARCHS:   # every other shape runs everywhere
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert supports_shape(get_config(a), s)
+
+
+def test_param_count_headlines():
+    """Total params should be in the ballpark the model names claim."""
+    expect = {"llama3-8b": (7e9, 9e9),
+              "qwen2.5-14b": (12e9, 16e9),
+              "gemma3-12b": (10e9, 14e9),
+              "qwen1.5-110b": (95e9, 120e9),
+              "chameleon-34b": (30e9, 38e9),
+              "jamba-v0.1-52b": (45e9, 58e9),
+              "rwkv6-3b": (2.2e9, 3.6e9),
+              "deepseek-v2-236b": (200e9, 260e9),
+              "granite-moe-3b-a800m": (2.4e9, 4.0e9),
+              "whisper-large-v3": (1.2e9, 2.0e9)}
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_counts()["total"]
+        assert lo <= n <= hi, (arch, n)
+
+
+def test_smoke_configs_are_small():
+    for arch in ARCHS:
+        cfg = get_config(arch, smoke=True)
+        assert cfg.param_counts()["total"] < 5e6, arch
+        assert cfg.vocab_size <= 512

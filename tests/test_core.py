@@ -1,0 +1,166 @@
+"""Paper-core tests: events, DES calibration against the paper's measured
+claims, Amdahl analytics, queueing stability, and the TCO tables."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import acceleration as acc
+from repro.core.broker import BrokerConfig
+from repro.core.events import EventLog
+from repro.core.queueing import bottleneck, max_stable_speedup, utilizations
+from repro.core.simulator import (
+    ClusterSim, FaceRecWorkload, object_detection_workload,
+)
+from repro.core.tco import homogeneous_design, paper_comparison
+
+
+# ---- events ---------------------------------------------------------------
+
+def test_event_log_breakdown_and_tax():
+    log = EventLog()
+    log.log(0, "ingest", 0.0, 0.02)
+    log.log(0, "detect", 0.02, 0.09)
+    log.log(0, "wait", 0.09, 0.22)
+    log.log(0, "identify", 0.22, 0.35)
+    bd = log.breakdown()
+    assert abs(bd["wait"] - 0.13) < 1e-9
+    tax = log.ai_tax(ai_stages={"detect", "identify"})
+    assert abs(tax["ai_fraction"] - (0.07 + 0.13) / 0.35) < 1e-9
+    assert abs(log.mean_e2e() - 0.35) < 1e-9
+
+
+# ---- Amdahl (paper §5.1) ---------------------------------------------------
+
+def test_amdahl_asymptotes_match_paper():
+    # detection 42% AI -> asymptote 1.72x; identification 88% -> 8.3x
+    assert abs(acc.DETECTION.asymptote - 1.0 / 0.58) < 1e-9
+    assert abs(acc.IDENTIFICATION.asymptote - 1.0 / 0.12) < 1e-9
+    # paper: detection 1.59x overall at 8x AI accel, 1.66x at 16x
+    assert acc.DETECTION.amdahl_speedup(8) == pytest.approx(1.59, abs=0.02)
+    assert acc.DETECTION.amdahl_speedup(16) == pytest.approx(1.66, abs=0.02)
+    # identification: 5.6x at 16x, 6.6x at 32x (paper rounds from
+    # measured data; 0.88 exactly gives 5.70/6.78)
+    assert acc.IDENTIFICATION.amdahl_speedup(16) == pytest.approx(5.6, abs=0.25)
+    assert acc.IDENTIFICATION.amdahl_speedup(32) == pytest.approx(6.6, abs=0.25)
+    assert acc.INGESTION.amdahl_speedup(32) == 1.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(0.01, 0.99), st.floats(1.0, 64.0))
+def test_amdahl_properties(f, s):
+    p = acc.StageProfile("x", f)
+    sp = p.amdahl_speedup(s)
+    assert 1.0 <= sp <= s + 1e-9
+    assert sp <= p.asymptote + 1e-9
+
+
+# ---- queueing stability (paper §5.3-5.4) ------------------------------------
+
+def test_storage_is_first_bottleneck():
+    wl, bk = FaceRecWorkload(), BrokerConfig()
+    b = bottleneck(wl, bk, speedup=8.0)
+    assert b.name == "broker_storage_write"
+    assert not b.stable
+    assert bottleneck(wl, bk, speedup=6.0).stable
+
+
+def test_paper_fig15_unlock_thresholds():
+    wl = FaceRecWorkload()
+    # drives: paper unlocks 12x@2, 24x@3, 32x@4; 8x infinite @1
+    s1 = max_stable_speedup(wl, BrokerConfig(drives_per_broker=1))
+    s2 = max_stable_speedup(wl, BrokerConfig(drives_per_broker=2))
+    s3 = max_stable_speedup(wl, BrokerConfig(drives_per_broker=3))
+    s4 = max_stable_speedup(wl, BrokerConfig(drives_per_broker=4))
+    assert s1 < 8.0
+    assert 12.0 <= s2 < 16.0
+    assert 24.0 <= s3 < 32.0
+    assert s4 >= 32.0
+    # brokers monotonically unlock higher speedups
+    sb = [max_stable_speedup(wl, BrokerConfig(n_brokers=n))
+          for n in (3, 4, 6, 8)]
+    assert sb[0] < 8.0 <= sb[1] and all(a < b for a, b in zip(sb, sb[1:]))
+    # thumbnail shrink raises the limit (Fig 15c)
+    s_half = max_stable_speedup(FaceRecWorkload(face_bytes=37300 / 2),
+                                BrokerConfig())
+    assert s_half > 1.8 * s1
+
+
+def test_network_never_binds_before_storage():
+    wl, bk = FaceRecWorkload(), BrokerConfig()
+    for s in (1, 2, 4, 8, 16, 32):
+        u = utilizations(wl, bk, s)
+        assert u["broker_network"].rho < u["broker_storage_write"].rho
+
+
+# ---- DES (paper Figs 6/10/11/14) --------------------------------------------
+
+def _run(wl, bk, s, **kw):
+    kw.setdefault("scale", 0.04)
+    kw.setdefault("sim_time", 20)
+    kw.setdefault("warmup", 5)
+    return ClusterSim(wl, bk, speedup=s, **kw).run()
+
+
+def test_des_storage_util_matches_paper_10pct_at_1x():
+    r = _run(FaceRecWorkload(), BrokerConfig(), 1)
+    assert 0.07 <= r.broker_write_util <= 0.13       # paper: ~10%
+    assert not r.unstable
+
+
+def test_des_unstable_at_8x_stable_at_6x():
+    assert not _run(FaceRecWorkload(), BrokerConfig(), 6).unstable
+    r8 = _run(FaceRecWorkload(), BrokerConfig(), 8)
+    assert r8.unstable and r8.mean_latency == float("inf")
+
+
+def test_des_network_stays_below_paper_bound():
+    # paper Fig 11a: broker net read ~6% of 100 Gbps at 8x
+    r = _run(FaceRecWorkload(), BrokerConfig(), 8)
+    assert r.broker_net_util < 0.10
+
+
+def test_des_latency_improves_with_acceleration_until_saturation():
+    lats = [_run(FaceRecWorkload(), BrokerConfig(), s).mean_latency
+            for s in (1, 4)]
+    assert lats[1] < lats[0]
+
+
+def test_des_fig6_realistic_video_breakdown():
+    """Empirical face distribution: waiting is a large share (paper: >33%)
+    and mean e2e latency lands in the paper's few-hundred-ms regime."""
+    wl = FaceRecWorkload(face_dist="empirical", faces_per_frame=0.64)
+    r = _run(wl, BrokerConfig(), 1)
+    assert not r.unstable
+    assert 0.15 <= r.waiting_share <= 0.8
+    assert 0.15 <= r.mean_latency <= 1.5
+
+
+def test_object_detection_second_app():
+    wl = object_detection_workload()
+    r1 = _run(wl, BrokerConfig(), 1, scale=0.3)
+    assert not r1.unstable
+    r8 = _run(wl, BrokerConfig(), 8, scale=0.3)
+    assert not r8.unstable and r8.throughput > 4 * r1.throughput
+    r16 = _run(wl, BrokerConfig(), 16, scale=0.3)
+    assert r16.unstable                      # paper: infinite at >=16x
+    assert r16.ingest_delay_mean > 0.1       # the producer-side Delay tax
+
+
+# ---- TCO (paper Tables 3/4) --------------------------------------------------
+
+def test_tco_tables_match_paper_to_the_dollar():
+    h = homogeneous_design(drives_per_node=1)
+    assert h.equipment_cost == 33_577_760            # Table 3 total
+    p = paper_comparison().purpose_built
+    assert p.equipment_cost == 27_878_431            # Table 4 total
+
+
+def test_tco_saving_exceeds_paper_15pct():
+    c = paper_comparison(support_32x=True)
+    assert c.saving_fraction >= 0.15                 # paper: >15% (16.6%)
+    # even vs the base homogeneous design the saving is close to paper's
+    from repro.core.tco import TCOComparison, purpose_built_design
+    c2 = TCOComparison(homogeneous_design(drives_per_node=1),
+                       purpose_built_design())
+    assert 0.13 <= c2.saving_fraction <= 0.20

@@ -1,0 +1,77 @@
+"""The trip-count-aware HLO cost walker vs known-cost programs."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.roofline import hlo_cost
+from repro.roofline.analysis import model_flops_estimate
+from repro.configs import SHAPES, get_config
+
+
+def test_scan_trip_count_multiplication():
+    def f(xs, w):
+        def body(c, x):
+            return jnp.tanh(c @ w) + x, ()
+        c, _ = jax.lax.scan(body, xs[0], xs)
+        return c
+
+    c = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((7, 8, 16), jnp.float32),
+        jax.ShapeDtypeStruct((16, 16), jnp.float32)).compile()
+    cost = hlo_cost.analyze(c.as_text())
+    assert cost.dot_flops == 7 * 2 * 8 * 16 * 16
+    assert cost.ew_flops >= 7 * 2 * 8 * 16          # tanh + add per step
+
+
+def test_nested_scan():
+    def f(xs, w):
+        def outer(c, x):
+            def inner(ci, xi):
+                return ci @ w, ()
+            ci, _ = jax.lax.scan(inner, c, x)
+            return ci, ()
+        c, _ = jax.lax.scan(outer, xs[0, 0], xs)
+        return c
+
+    c = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((3, 5, 8, 8), jnp.float32),
+        jax.ShapeDtypeStruct((8, 8), jnp.float32)).compile()
+    cost = hlo_cost.analyze(c.as_text())
+    assert cost.dot_flops == 3 * 5 * 2 * 8 * 8 * 8
+
+
+def test_plain_matmul_flops():
+    f = jax.jit(lambda a, b: a @ b)
+    c = f.lower(jax.ShapeDtypeStruct((32, 64), jnp.float32),
+                jax.ShapeDtypeStruct((64, 128), jnp.float32)).compile()
+    cost = hlo_cost.analyze(c.as_text())
+    assert cost.dot_flops == 2 * 32 * 64 * 128
+
+
+def test_collective_bytes_parsing():
+    txt = """
+HloModule m
+ENTRY %main (a: f32[256,64]) -> f32[256,64] {
+  %ar = f32[256,64]{1,0} all-reduce(%a), replica_groups={}
+  %ag = bf16[128,32]{1,0} all-gather(%x), dimensions={0}
+  ROOT %r = f32[256,64]{1,0} copy(%ar)
+}
+"""
+    cost = hlo_cost.analyze(txt)
+    assert cost.coll["all-reduce"] == 256 * 64 * 4
+    assert cost.coll["all-gather"] == 128 * 32 * 2
+
+
+def test_model_flops_estimates_scale_sanely():
+    cfg = get_config("llama3-8b")
+    t = model_flops_estimate(cfg, SHAPES["train_4k"])
+    p = model_flops_estimate(cfg, SHAPES["prefill_32k"])
+    d = model_flops_estimate(cfg, SHAPES["decode_32k"])
+    n = cfg.param_counts()["active"]
+    assert t == pytest.approx(6 * n * 4096 * 256)
+    assert p == pytest.approx(2 * n * 32768 * 32)
+    assert d == pytest.approx(2 * n * 128)
+    # ~8B params for llama3-8b
+    assert 7.0e9 < n < 9.0e9

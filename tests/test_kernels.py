@@ -1,0 +1,222 @@
+"""Per-kernel validation: shape/dtype sweeps + hypothesis property tests,
+each asserting allclose against the pure-jnp oracle in repro.kernels.ref."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.linear_scan import mamba_scan, rwkv_scan
+from repro.kernels.resize import resize_bilinear
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rand(shape, dtype=jnp.float32, seed=0, scale=1.0):
+    return (jax.random.normal(jax.random.PRNGKey(seed), shape) * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# flash attention
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,Sq,Skv,H,KV,D,causal,window", [
+    (2, 256, 256, 4, 2, 64, True, None),
+    (1, 256, 256, 4, 4, 64, False, None),
+    (2, 256, 256, 8, 2, 128, True, 128),
+    (1, 128, 256, 4, 2, 32, True, None),
+    (1, 128, 128, 2, 1, 256, True, None),
+])
+def test_flash_attention_vs_ref(B, Sq, Skv, H, KV, D, causal, window):
+    q = _rand((B, Sq, H, D), seed=1)
+    k = _rand((B, Skv, KV, D), seed=2)
+    v = _rand((B, Skv, KV, D), seed=3)
+    off = Skv - Sq
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          q_offset=off, interpret=True)
+    want = ref.attention(q, k, v, causal=causal, window=window, q_offset=off)
+    np.testing.assert_allclose(out, want, atol=3e-5, rtol=3e-5)
+
+
+def test_flash_attention_bf16():
+    q = _rand((1, 128, 4, 64), jnp.bfloat16, seed=4)
+    k = _rand((1, 128, 2, 64), jnp.bfloat16, seed=5)
+    v = _rand((1, 128, 2, 64), jnp.bfloat16, seed=6)
+    out = flash_attention(q, k, v, causal=True, interpret=True)
+    want = ref.attention(q, k, v, causal=True)
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               want.astype(jnp.float32), atol=3e-2, rtol=3e-2)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 3), st.sampled_from([64, 128, 192]),
+       st.sampled_from([(4, 1), (4, 2), (4, 4)]),
+       st.sampled_from([32, 64]), st.booleans())
+def test_flash_attention_property(B, S, heads, D, causal):
+    """Property: kernel == oracle for arbitrary GQA geometry."""
+    H, KV = heads
+    q = _rand((B, S, H, D), seed=S + H)
+    k = _rand((B, S, KV, D), seed=S + KV)
+    v = _rand((B, S, KV, D), seed=S + 7)
+    out = flash_attention(q, k, v, causal=causal, interpret=True,
+                          blk_q=64, blk_k=64)
+    want = ref.attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, want, atol=3e-5, rtol=3e-5)
+
+
+# --------------------------------------------------------------------------
+# decode attention
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,L,H,KV,D,window", [
+    (3, 1024, 8, 2, 64, None),
+    (2, 512, 4, 4, 128, None),
+    (2, 1024, 8, 2, 64, 100),
+])
+def test_decode_attention_vs_ref(B, L, H, KV, D, window):
+    q = _rand((B, 1, H, D), seed=1)
+    k = _rand((B, L, KV, D), seed=2)
+    v = _rand((B, L, KV, D), seed=3)
+    kv_len = jnp.asarray([L, L // 2, 17][:B])
+    out = decode_attention(q, k, v, kv_len=kv_len, window=window,
+                           interpret=True, blk_k=256)
+    want = ops.decode_attention(q, k, v, kv_len=kv_len, window=window,
+                                impl="xla")
+    np.testing.assert_allclose(out, want, atol=3e-5, rtol=3e-5)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(1, 4), st.sampled_from([256, 512]),
+       st.integers(1, 200))
+def test_decode_attention_kvlen_property(B, L, kvl):
+    """Property: entries beyond kv_len never influence the output."""
+    q = _rand((B, 1, 4, 32), seed=9)
+    k = _rand((B, L, 2, 32), seed=10)
+    v = _rand((B, L, 2, 32), seed=11)
+    kv_len = jnp.full((B,), min(kvl, L))
+    out1 = decode_attention(q, k, v, kv_len=kv_len, interpret=True, blk_k=128)
+    # poison the invalid region
+    mask = jnp.arange(L)[None, :, None, None] >= kv_len[:, None, None, None]
+    k2 = jnp.where(mask, 1e4, k)
+    v2 = jnp.where(mask, -1e4, v)
+    out2 = decode_attention(q, k2, v2, kv_len=kv_len, interpret=True, blk_k=128)
+    np.testing.assert_allclose(out1, out2, atol=1e-5, rtol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# linear scans
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,Di,N,blk_t,blk_c", [
+    (2, 64, 256, 8, 16, 128),
+    (1, 32, 128, 16, 8, 128),
+])
+def test_mamba_scan_vs_ref(B, S, Di, N, blk_t, blk_c):
+    delta = jax.nn.softplus(_rand((B, S, Di), seed=1))
+    A = -jnp.exp(_rand((Di, N), seed=2))
+    Bt = _rand((B, S, N), seed=3)
+    Ct = _rand((B, S, N), seed=4)
+    x = _rand((B, S, Di), seed=5)
+    h0 = _rand((B, Di, N), seed=6, scale=0.1)
+    y, h = mamba_scan(delta, A, Bt, Ct, x, h0, interpret=True,
+                      blk_t=blk_t, blk_c=blk_c)
+    yr, hr = ref.mamba_scan(delta, A, Bt, Ct, x, h0)
+    np.testing.assert_allclose(y, yr, atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(h, hr, atol=2e-4, rtol=2e-4)
+
+
+def test_mamba_xla_chunked_vs_ref():
+    B, S, Di, N = 2, 100, 24, 4
+    delta = jax.nn.softplus(_rand((B, S, Di), seed=1))
+    A = -jnp.exp(_rand((Di, N), seed=2))
+    Bt, Ct = _rand((B, S, N), seed=3), _rand((B, S, N), seed=4)
+    x = _rand((B, S, Di), seed=5)
+    y, h = ops.mamba_scan(delta, A, Bt, Ct, x, impl="xla", chunk=32)
+    yr, hr = ref.mamba_scan(delta, A, Bt, Ct, x)
+    np.testing.assert_allclose(y, yr, atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(h, hr, atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("B,S,H,K,V,blk_t", [
+    (2, 64, 3, 32, 32, 16),
+    (1, 48, 2, 64, 64, 16),
+])
+def test_rwkv_scan_vs_ref(B, S, H, K, V, blk_t):
+    r = _rand((B, S, H, K), seed=1)
+    w = jax.nn.sigmoid(_rand((B, S, H, K), seed=2)) * 0.5 + 0.45
+    k = _rand((B, S, H, K), seed=3, scale=0.3)
+    v = _rand((B, S, H, V), seed=4)
+    u = _rand((H, K), seed=5, scale=0.1)
+    h0 = _rand((B, H, K, V), seed=6, scale=0.1)
+    o, h = rwkv_scan(r, w, k, v, u, h0, interpret=True, blk_t=blk_t)
+    orf, hrf = ref.rwkv_scan(r, w, k, v, u, h0)
+    np.testing.assert_allclose(o, orf, atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(h, hrf, atol=2e-4, rtol=2e-4)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(1, 2), st.sampled_from([16, 32, 48]))
+def test_rwkv_chunk_invariance(B, S):
+    """Property: the chunked XLA path is chunk-size invariant."""
+    r = _rand((B, S, 2, 16), seed=1)
+    w = jax.nn.sigmoid(_rand((B, S, 2, 16), seed=2)) * 0.5 + 0.45
+    k = _rand((B, S, 2, 16), seed=3, scale=0.3)
+    v = _rand((B, S, 2, 16), seed=4)
+    u = _rand((2, 16), seed=5, scale=0.1)
+    o1, h1 = ops.rwkv_scan(r, w, k, v, u, impl="xla", chunk=8)
+    o2, h2 = ops.rwkv_scan(r, w, k, v, u, impl="xla", chunk=16)
+    np.testing.assert_allclose(o1, o2, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(h1, h2, atol=1e-4, rtol=1e-4)
+
+
+def test_scan_state_chaining():
+    """Running two half-sequences with carried state == one full scan."""
+    B, S, H, K, V = 1, 32, 2, 16, 16
+    r = _rand((B, S, H, K), seed=1)
+    w = jax.nn.sigmoid(_rand((B, S, H, K), seed=2)) * 0.5 + 0.45
+    k = _rand((B, S, H, K), seed=3, scale=0.3)
+    v = _rand((B, S, H, V), seed=4)
+    u = _rand((H, K), seed=5, scale=0.1)
+    o_full, h_full = ref.rwkv_scan(r, w, k, v, u)
+    o1, h1 = ref.rwkv_scan(r[:, :16], w[:, :16], k[:, :16], v[:, :16], u)
+    o2, h2 = ref.rwkv_scan(r[:, 16:], w[:, 16:], k[:, 16:], v[:, 16:], u, h1)
+    np.testing.assert_allclose(jnp.concatenate([o1, o2], 1), o_full,
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(h2, h_full, atol=1e-5, rtol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# resize
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("H,W,oh,ow", [
+    (54, 96, 27, 48),      # 2x downscale (the paper's 1080->540 analogue)
+    (64, 64, 128, 128),    # upscale
+    (37, 53, 16, 24),      # ragged
+])
+def test_resize_vs_ref(H, W, oh, ow):
+    img = jax.random.uniform(KEY, (2, H, W, 3), jnp.float32) * 255
+    out = resize_bilinear(img, oh, ow, interpret=True)
+    want = ref.resize_bilinear(img, oh, ow)
+    np.testing.assert_allclose(out, want, atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(8, 40), st.integers(8, 40))
+def test_resize_identity_property(H, W):
+    """Property: resizing to the same size is the identity."""
+    img = jax.random.uniform(jax.random.PRNGKey(H * W), (H, W, 1))
+    out = ref.resize_bilinear(img, H, W)
+    np.testing.assert_allclose(out, img, atol=1e-6)
+
+
+def test_attention_xla_chunk_invariance():
+    q = _rand((2, 200, 4, 32), seed=1)
+    k = _rand((2, 200, 2, 32), seed=2)
+    v = _rand((2, 200, 2, 32), seed=3)
+    a = ops.attention(q, k, v, causal=True, impl="xla", q_chunk=64)
+    b = ops.attention(q, k, v, causal=True, impl="xla", q_chunk=512)
+    np.testing.assert_allclose(a, b, atol=2e-5, rtol=2e-5)

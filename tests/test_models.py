@@ -1,0 +1,154 @@
+"""Per-architecture smoke tests (reduced family-preserving configs) +
+decode-vs-forward consistency — the core model-correctness invariant."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES, get_config, supports_shape
+from repro.models import transformer as tf
+from repro.models import encdec as ed
+from repro.models.model import build_model
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=16, seed=1):
+    k = jax.random.PRNGKey(seed)
+    tokens = jax.random.randint(k, (B, S + 1), 0, cfg.vocab_size)
+    batch = {"tokens": tokens[:, :-1], "labels": tokens[:, 1:]}
+    if cfg.encdec:
+        batch["frames"] = jax.random.normal(k, (B, S, cfg.d_model),
+                                            jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_loss(arch):
+    """One forward + loss on CPU: output shapes right, no NaNs."""
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(KEY)
+    batch = _batch(cfg)
+    hidden, aux = model.forward(params, batch)
+    B = batch["tokens"].shape[0]
+    assert hidden.shape[0] == B and hidden.shape[-1] == cfg.d_model
+    assert bool(jnp.all(jnp.isfinite(hidden)))
+    loss = model.loss(params, batch)
+    assert loss.shape == () and bool(jnp.isfinite(loss))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    """One gradient step on CPU: loss finite, grads finite, params move."""
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(KEY)
+    batch = _batch(cfg)
+    loss, grads = jax.value_and_grad(model.loss)(params, batch)
+    assert bool(jnp.isfinite(loss))
+    gleaves = jax.tree.leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in gleaves)
+    assert any(float(jnp.max(jnp.abs(g))) > 0 for g in gleaves)
+
+
+def _no_drop(cfg):
+    if cfg.moe:
+        return cfg.replace(moe=dataclasses.replace(
+            cfg.moe, capacity_factor=float(cfg.moe.n_experts) / cfg.moe.top_k))
+    return cfg
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch):
+    """Prefill + T decode steps reproduce full-forward logits (f32,
+    no-drop MoE capacity — capacity dropping is the one legitimate
+    difference between the batched and incremental paths)."""
+    cfg = _no_drop(get_config(arch, smoke=True).replace(dtype="float32"))
+    model = build_model(cfg)
+    params = model.init(KEY)
+    B, S, T = 2, 24, 3
+    k = jax.random.PRNGKey(2)
+    tokens = jax.random.randint(k, (B, S + T), 0, cfg.vocab_size)
+    batch = {"tokens": tokens[:, :S]}
+    if cfg.encdec:
+        batch["frames"] = jax.random.normal(k, (B, 12, cfg.d_model),
+                                            jnp.float32)
+        hidden, _ = ed.encdec_forward(cfg, params, batch["frames"], tokens,
+                                      remat=False)
+    else:
+        hidden, _ = tf.lm_forward(cfg, params, tokens, remat=False)
+    full = tf.lm_logits(cfg, params, hidden)
+    scale = float(jnp.max(jnp.abs(full))) + 1e-6
+    lp, cache = model.prefill(params, batch, cache_len=S + T)
+    np.testing.assert_allclose(lp, full[:, S - 1], atol=2e-4 * scale,
+                               rtol=1e-4)
+    for t in range(T):
+        lg, cache = model.decode_step(params, cache, tokens[:, S + t:S + t + 1])
+        np.testing.assert_allclose(lg, full[:, S + t], atol=2e-4 * scale,
+                                   rtol=1e-4)
+
+
+def test_gemma_sliding_window_masks_distant_tokens():
+    """Local layers must not see past the window."""
+    cfg = get_config("gemma3-12b", smoke=True).replace(
+        dtype="float32", n_layers=5,
+        block_pattern=tuple(
+            [type(get_config("gemma3-12b").block_pattern[0])(window=4)] * 5))
+    model = build_model(cfg)
+    params = model.init(KEY)
+    S = 20
+    t1 = jax.random.randint(jax.random.PRNGKey(3), (1, S), 0, cfg.vocab_size)
+    t2 = t1.at[:, 0:4].set((t1[:, 0:4] + 7) % cfg.vocab_size)
+    h1, _ = tf.lm_forward(cfg, params, t1, remat=False)
+    h2, _ = tf.lm_forward(cfg, params, t2, remat=False)
+    # with window 4 and 5 layers, receptive field = 5*(4-1)=15 < 19
+    np.testing.assert_allclose(h1[:, -1], h2[:, -1], atol=1e-5)
+
+
+def test_moe_capacity_drops_are_bounded():
+    """Even with drops, MoE output stays finite and close in norm."""
+    cfg = get_config("granite-moe-3b-a800m", smoke=True).replace(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(KEY)
+    batch = _batch(cfg, B=2, S=32)
+    hidden, aux = model.forward(params, batch)
+    assert bool(jnp.all(jnp.isfinite(hidden)))
+    assert float(aux) >= 0.0
+
+
+def test_mla_cache_is_compressed():
+    """DeepSeek MLA decode cache must be the low-rank latent, not full KV."""
+    cfg = get_config("deepseek-v2-236b", smoke=True)
+    model = build_model(cfg)
+    cache = model.abstract_cache(batch=2, cache_len=16)
+    layer = cache["blocks"]["l0"]
+    assert set(layer) == {"ckv", "kr"}
+    assert layer["ckv"].shape[-1] == cfg.mla.kv_lora
+    full_kv = 2 * cfg.n_heads * cfg.head_dim
+    assert layer["ckv"].shape[-1] + layer["kr"].shape[-1] < full_kv / 4
+
+
+def test_param_counts_match_init():
+    """cfg.param_counts() total tracks the real initialized count."""
+    for arch in ("llama3-8b", "granite-moe-3b-a800m", "jamba-v0.1-52b"):
+        cfg = get_config(arch, smoke=True)
+        model = build_model(cfg)
+        n_real = model.n_params()
+        n_est = cfg.param_counts()["total"]
+        assert abs(n_real - n_est) / n_real < 0.35, (arch, n_real, n_est)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_input_specs_cover_all_shapes(arch):
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    for name, shape in SHAPES.items():
+        if not supports_shape(cfg, name):
+            continue
+        specs = model.input_specs(shape)
+        assert "tokens" in specs
+        for s in specs.values():
+            assert all(d > 0 for d in s.shape)

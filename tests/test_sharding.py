@@ -1,0 +1,126 @@
+"""Sharding-rule unit tests + an 8-device numerical-equivalence check
+(sharded train step == single-device train step) run in a subprocess so
+the main test process keeps its single CPU device."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import pytest
+from jax.sharding import Mesh, PartitionSpec as PS
+
+import numpy as np
+
+from repro.distributed import sharding as shd
+
+
+def _mesh2d(shape=(2, 2), axes=("data", "model")):
+    n = int(np.prod(shape))
+    devs = np.array([jax.devices()[0]] * n).reshape(shape)  # spec-only mesh
+    return Mesh(devs, axes)
+
+
+class _FakeMesh:
+    """Shape-only mesh stand-in for spec_for tests."""
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def test_spec_for_basic():
+    mesh = _FakeMesh({"data": 4, "model": 8})
+    rules = dict(shd.TRAIN_RULES)
+    spec = shd.spec_for(("embed", "mlp"), (64, 128), mesh, rules)
+    assert spec == PS("data", "model")
+
+
+def test_spec_for_drops_indivisible():
+    mesh = _FakeMesh({"data": 4, "model": 16})
+    rules = dict(shd.TRAIN_RULES)
+    # 40 heads don't divide 16 -> axis dropped
+    spec = shd.spec_for(("embed", "heads"), (64, 40), mesh, rules)
+    assert spec == PS("data")
+    # kv_heads=8 on 16-way axis -> dropped
+    spec = shd.spec_for((None, "kv_seq", "kv_heads", None),
+                        (8, 1024, 8, 128), mesh,
+                        dict(shd.SERVE_RULES))
+    assert spec == PS(None, "model")
+
+
+def test_spec_for_no_duplicate_mesh_axes():
+    mesh = _FakeMesh({"data": 4, "model": 16})
+    rules = dict(shd.TRAIN_RULES)
+    # experts and mlp both map to model; only the first may take it
+    spec = shd.spec_for(("experts", "embed", "mlp"), (160, 64, 1536),
+                        mesh, rules)
+    assert spec == PS("model", "data")
+
+
+def test_spec_for_multi_axis_batch():
+    mesh = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+    spec = shd.spec_for(("batch", None), (256, 128), mesh,
+                        dict(shd.TRAIN_RULES))
+    assert spec == PS(("pod", "data"))
+
+
+def test_shard_outside_context_is_identity():
+    import jax.numpy as jnp
+    x = jnp.ones((4, 4))
+    assert shd.shard(x, "batch", None) is x
+
+
+SUBPROCESS_EQUIV = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+    from repro.configs import get_config
+    from repro.models.model import build_model
+    from repro.distributed import sharding as shd
+    from repro.train.optimizer import AdamWConfig, init_opt_state
+    from repro.train.train_step import make_train_shardings, make_train_step
+
+    cfg = get_config("llama3-8b", smoke=True).replace(
+        n_layers=2, d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
+        d_ff=64, vocab_size=64, dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    k = jax.random.PRNGKey(1)
+    toks = jax.random.randint(k, (8, 17), 0, cfg.vocab_size)
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    hp = AdamWConfig()
+    opt = init_opt_state(params)
+
+    # single-device reference
+    step_ref = make_train_step(model, hp, type("S", (), {
+        "mesh": None, "rules": None, "params": None})())
+    def ref_step(params, opt, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        from repro.train.optimizer import adamw_update
+        return adamw_update(grads, opt, params, hp)
+    p_ref, o_ref, g_ref = jax.jit(ref_step)(params, opt, batch)
+
+    # sharded on a (2, 4) mesh
+    mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+    sh = make_train_shardings(model, mesh, batch_specs={
+        kk: jax.ShapeDtypeStruct(v.shape, v.dtype) for kk, v in batch.items()})
+    step = make_train_step(model, hp, sh)
+    jstep = jax.jit(step, in_shardings=(sh.params, type(o_ref)(
+        m=sh.params, v=sh.params, count=NamedSharding(mesh, PS())), sh.batch))
+    p_sh, o_sh, metrics = jstep(params, opt, batch)
+
+    for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_sh)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-5, rtol=2e-5)
+    print("EQUIV_OK gradnorm", float(metrics["grad_norm"]))
+""")
+
+
+@pytest.mark.slow
+def test_sharded_train_step_matches_single_device():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = env.get("PYTHONPATH", "src")
+    r = subprocess.run([sys.executable, "-c", SUBPROCESS_EQUIV],
+                       capture_output=True, text=True, env=env, timeout=600)
+    assert "EQUIV_OK" in r.stdout, r.stdout + r.stderr
