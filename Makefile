@@ -1,0 +1,29 @@
+# Tier-1 verification and fast smoke targets.
+#   make test        - full suite minus the known pre-existing failures
+#                      (ROADMAP.md Open items: HLO-cost parser vs this
+#                      container's jax) so green == nothing new broke.
+#                      The raw tier-1 command stays
+#                      `PYTHONPATH=src python -m pytest -x -q`.
+#   make bench-smoke - fast benchmark subset, proves the harness runs
+#   make docs-lint   - docs exist and the figure map covers every bench
+.PHONY: test bench-smoke docs-lint check
+
+PY := PYTHONPATH=src python
+
+KNOWN_FAIL := \
+  --deselect tests/test_hlo_cost.py::test_plain_matmul_flops \
+  --deselect tests/test_hlo_cost.py::test_scan_trip_count_multiplication \
+  --deselect tests/test_hlo_cost.py::test_nested_scan \
+  --deselect tests/test_perf_infra.py::test_dus_inplace_accounting
+
+test:
+	$(PY) -m pytest -q $(KNOWN_FAIL)
+
+bench-smoke:
+	$(PY) -m benchmarks.run --only fig09
+	$(PY) -m benchmarks.run --only batching
+
+docs-lint:
+	$(PY) scripts/docs_lint.py
+
+check: test bench-smoke docs-lint

@@ -1,0 +1,52 @@
+"""Docs lint: the figure map must cover every benchmark module.
+
+Checks (exit non-zero on any failure):
+  * README.md and the docs/ pages exist and are non-trivial;
+  * every ``benchmarks/*.py`` module (minus shared plumbing) is
+    mentioned in docs/figures.md;
+  * every module registered in benchmarks/run.py MODULES has a file.
+Run via ``make docs-lint``.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+PLUMBING = {"common.py", "run.py", "__init__.py"}
+REQUIRED_DOCS = ["README.md", "docs/figures.md", "docs/ai_tax_accounting.md"]
+
+
+def main() -> int:
+    errors = []
+    for rel in REQUIRED_DOCS:
+        p = ROOT / rel
+        if not p.is_file():
+            errors.append(f"missing doc: {rel}")
+        elif len(p.read_text().split()) < 50:
+            errors.append(f"doc too thin (<50 words): {rel}")
+
+    figmap = ROOT / "docs" / "figures.md"
+    figtext = figmap.read_text() if figmap.is_file() else ""
+    for bench in sorted((ROOT / "benchmarks").glob("*.py")):
+        if bench.name in PLUMBING:
+            continue
+        if bench.name not in figtext:
+            errors.append(f"benchmarks/{bench.name} not in docs/figures.md")
+
+    runpy = (ROOT / "benchmarks" / "run.py").read_text()
+    for mod in re.findall(r'"benchmarks\.(\w+)"', runpy):
+        if not (ROOT / "benchmarks" / f"{mod}.py").is_file():
+            errors.append(f"run.py registers benchmarks.{mod} but no file")
+
+    for e in errors:
+        print(f"docs-lint: {e}", file=sys.stderr)
+    if not errors:
+        print(f"docs-lint: OK ({len(REQUIRED_DOCS)} docs, figure map "
+              "covers all benchmarks)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

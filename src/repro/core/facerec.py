@@ -23,20 +23,42 @@ THUMB = 32          # thumbnail side (paper: 160x160)
 EMBED_DIM = 128     # paper: 128-byte feature vector
 
 
+def _pad_pow2(n: int) -> int:
+    """Batch-size bucket: next power of two, so jit traces stay bounded."""
+    return 1 << (n - 1).bit_length()
+
+
+def _pad_rows_pow2(arr: np.ndarray) -> np.ndarray:
+    """Zero-pad the leading dim to its power-of-two bucket.
+
+    Every batch entry point pads through here (and slices the result
+    back to the true B) so the jit-retrace bucketing can't drift
+    between stages.
+    """
+    pad = _pad_pow2(len(arr)) - len(arr)
+    if pad:
+        arr = np.concatenate(
+            [arr, np.zeros((pad, *arr.shape[1:]), arr.dtype)], axis=0)
+    return arr
+
+
 @functools.partial(jax.jit, static_argnums=(1,))
 def detect_heatmap(frame: jax.Array, pool: int = 8) -> jax.Array:
     """Brightness heatmap at 1/pool resolution. frame: (H, W, 3) uint8."""
-    x = frame.astype(jnp.float32).mean(-1)
-    H, W = x.shape
-    x = x[:H - H % pool, :W - W % pool]
-    x = x.reshape(H // pool, pool, W // pool, pool).mean((1, 3))
-    return x
+    return detect_heatmap_batch(frame[None], pool)[0]
 
 
-def detect_faces(frame: np.ndarray, pool: int = 8, thresh: float = 60.0,
-                 max_faces: int = 5) -> list[tuple[int, int]]:
-    """Peak extraction on the heatmap -> face centers (full-res coords)."""
-    hm = np.asarray(detect_heatmap(jnp.asarray(frame), pool))
+@functools.partial(jax.jit, static_argnums=(1,))
+def detect_heatmap_batch(frames: jax.Array, pool: int = 8) -> jax.Array:
+    """Heatmaps for a stacked batch. frames: (B, H, W, 3) uint8."""
+    x = frames.astype(jnp.float32).mean(-1)
+    B, H, W = x.shape
+    x = x[:, :H - H % pool, :W - W % pool]
+    return x.reshape(B, H // pool, pool, W // pool, pool).mean((2, 4))
+
+
+def _extract_peaks(hm: np.ndarray, pool: int, thresh: float,
+                   max_faces: int) -> list[tuple[int, int]]:
     out = []
     hm = hm.copy()
     for _ in range(max_faces):
@@ -50,36 +72,115 @@ def detect_faces(frame: np.ndarray, pool: int = 8, thresh: float = 60.0,
     return out
 
 
+def detect_faces(frame: np.ndarray, pool: int = 8, thresh: float = 60.0,
+                 max_faces: int = 5) -> list[tuple[int, int]]:
+    """Peak extraction on the heatmap -> face centers (full-res coords)."""
+    return detect_faces_batch(frame[None], pool, thresh, max_faces)[0]
+
+
+def detect_faces_batch(frames: np.ndarray, pool: int = 8,
+                       thresh: float = 60.0,
+                       max_faces: int = 5) -> list[list[tuple[int, int]]]:
+    """Face centers per frame; one heatmap call for the whole stack.
+
+    frames: (B, H, W, 3). Peak extraction stays per-frame numpy (it is
+    data-dependent and tiny); only the dense heatmap is batched. B is
+    padded to a power-of-two bucket (like Embedder.embed_batch) so
+    ragged timeout-flushed batches don't each retrace the jit.
+    """
+    B = frames.shape[0]
+    hms = np.asarray(detect_heatmap_batch(
+        jnp.asarray(_pad_rows_pow2(frames)), pool))[:B]
+    return [_extract_peaks(hm, pool, thresh, max_faces) for hm in hms]
+
+
 def crop_thumbnail(frame: np.ndarray, y: int, x: int,
                    size: int = 48) -> np.ndarray:
-    H, W, _ = frame.shape
+    return crop_thumbnails_batch([frame], [[(y, x)]], size)[0][0]
+
+
+def crop_thumbnails_batch(frames: list[np.ndarray],
+                          centers_per_frame: list[list[tuple[int, int]]],
+                          size: int = 48) -> list[list[np.ndarray]]:
+    """Crop every detection in a batch of frames; one resize call total.
+
+    The paper's resize tax: each crop is normalized to the model's THUMB
+    input size. Batching turns B_faces separate resizes into a single
+    (B_faces, size, size, 3) -> (B_faces, THUMB, THUMB, 3) kernel call.
+    Returns thumbnails grouped per frame (same nesting as the centers).
+    """
     half = size // 2
-    y = int(np.clip(y, half, H - half))
-    x = int(np.clip(x, half, W - half))
-    crop = frame[y - half:y + half, x - half:x + half]
-    # the paper's resize tax: normalize crop to the model's input size
-    return np.asarray(ops.resize_bilinear(
-        jnp.asarray(crop, jnp.float32), THUMB, THUMB))
+    crops, counts = [], []
+    for frame, centers in zip(frames, centers_per_frame):
+        H, W, C = frame.shape
+        counts.append(len(centers))
+        for y, x in centers:
+            y0 = int(np.clip(y - half, 0, max(0, H - size)))
+            x0 = int(np.clip(x - half, 0, max(0, W - size)))
+            crop = frame[y0:y0 + size, x0:x0 + size]
+            if crop.shape[:2] != (size, size):
+                # frame smaller than the crop window: zero-pad so the
+                # stacked resize still sees uniform (size, size, C)
+                padded = np.zeros((size, size, C), crop.dtype)
+                padded[:crop.shape[0], :crop.shape[1]] = crop
+                crop = padded
+            crops.append(crop)
+    if not crops:
+        return [[] for _ in frames]
+    stack = _pad_rows_pow2(np.stack(crops).astype(np.float32))
+    thumbs = np.asarray(ops.resize_bilinear(
+        jnp.asarray(stack), THUMB, THUMB))[:len(crops)]
+    out, i = [], 0
+    for n in counts:
+        out.append(list(thumbs[i:i + n]))
+        i += n
+    return out
+
+
+@functools.partial(jax.jit, static_argnums=(3,))
+def _embed_batch_jit(thumbs, w1, w2, impl):
+    """Module-level jit: the compile cache is shared across Embedder
+    instances (weights are traced arguments), so fresh pipelines reuse
+    already-compiled batch buckets. The kernel impl is a static arg —
+    resolved by the caller at call time, not frozen at first trace —
+    so ops.set_default_impl/default_impl switches keep working."""
+    x = thumbs.reshape(thumbs.shape[0], -1) / 255.0
+    h = jnp.tanh(ops.matmul(x, w1, impl=impl))
+    e = ops.matmul(h, w2, impl=impl)
+    # clamp: zero-padded rows would otherwise normalize 0/0 -> NaN
+    # (sliced off, but poisonous under JAX_DEBUG_NANS)
+    return e / jnp.maximum(jnp.linalg.norm(e, axis=-1, keepdims=True),
+                           1e-12)
 
 
 class Embedder:
-    """Feature extraction: fixed random projection MLP (FaceNet stand-in)."""
+    """Feature extraction: fixed random projection MLP (FaceNet stand-in).
+
+    The batch path is the production one: a single jitted call over a
+    (B, THUMB, THUMB, 3) stack, two ops.matmul contractions (Pallas on
+    TPU), so B faces cost one kernel launch instead of B. The scalar
+    ``__call__`` delegates to it with B=1 so the two paths never drift.
+    """
 
     def __init__(self, seed: int = 7):
         k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
         d_in = THUMB * THUMB * 3
         self.w1 = jax.random.normal(k1, (d_in, 256)) / d_in**0.5
         self.w2 = jax.random.normal(k2, (256, EMBED_DIM)) / 16.0
-        self._fn = jax.jit(self._embed)
 
-    def _embed(self, thumb):
-        x = thumb.reshape(-1) / 255.0
-        h = jnp.tanh(x @ self.w1)
-        e = h @ self.w2
-        return e / jnp.linalg.norm(e)
+    def embed_batch(self, thumbs: np.ndarray) -> np.ndarray:
+        """thumbs: (B, THUMB, THUMB, 3) -> (B, EMBED_DIM), unit rows.
+
+        B is padded to a power-of-two bucket so jit retraces stay
+        bounded when timeout flushes produce ragged batch sizes.
+        """
+        B = thumbs.shape[0]
+        return np.asarray(_embed_batch_jit(
+            jnp.asarray(_pad_rows_pow2(thumbs)), self.w1, self.w2,
+            ops.get_default_impl()))[:B]
 
     def __call__(self, thumb: np.ndarray) -> np.ndarray:
-        return np.asarray(self._fn(jnp.asarray(thumb)))
+        return self.embed_batch(np.asarray(thumb)[None])[0]
 
 
 class Classifier:
@@ -90,6 +191,11 @@ class Classifier:
         self.mat = np.stack([gallery[n] for n in self.names])
 
     def identify(self, emb: np.ndarray) -> tuple[str, float]:
-        sims = self.mat @ emb
-        i = int(np.argmax(sims))
-        return self.names[i], float(sims[i])
+        return self.identify_batch(emb[None])[0]
+
+    def identify_batch(self, embs: np.ndarray) -> list[tuple[str, float]]:
+        """One (B, G) similarity matmul instead of B gallery sweeps."""
+        sims = embs @ self.mat.T
+        idx = np.argmax(sims, axis=1)
+        return [(self.names[i], float(sims[b, i]))
+                for b, i in enumerate(idx)]

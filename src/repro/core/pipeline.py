@@ -9,6 +9,17 @@ Supports both deployments of paper Fig 3:
   * two-stage  (fuse_ingest_detect=True, the paper's choice): frames move
     in-process; only face thumbnails cross the broker;
   * three-stage: frames also cross a broker topic.
+
+Stages are micro-batched (the paper's batching lever, §5.5): consumers
+drain their topic through a :class:`repro.core.batching.Batcher` bounded
+by ``batch_size``/``batch_timeout_ms``, and the AI stages run vectorized
+over the whole batch — one heatmap call per frame stack, one embed +
+identify matmul per face stack. Per-request accounting survives: queue
+waits are logged individually per item, and batched AI spans are
+amortized back to per-request events (see docs/ai_tax_accounting.md).
+With ``batch_size=1`` the pipeline degenerates to per-item processing
+through the very same code path, so batched and unbatched runs are
+directly comparable.
 """
 from __future__ import annotations
 
@@ -20,6 +31,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core import facerec
+from repro.core.batching import Batcher, BatchStats
 from repro.core.events import EventLog, Timer
 from repro.data.video import VideoStream
 
@@ -34,6 +46,7 @@ class PipelineResult:
     detected: int
     ground_truth: int
     matched: int
+    batch_stats: dict = field(default_factory=dict)   # stage -> BatchStats
 
     @property
     def recall(self) -> float:
@@ -46,27 +59,37 @@ class PipelineResult:
 class StreamingPipeline:
     def __init__(self, *, n_frames: int = 60, fuse_ingest_detect: bool = True,
                  n_identify_workers: int = 2, seed: int = 0,
-                 gallery_size: int = 8):
+                 gallery_size: int = 8, batch_size: int = 1,
+                 batch_timeout_ms: float = 5.0):
         self.n_frames = n_frames
         self.fused = fuse_ingest_detect
         self.n_workers = n_identify_workers
+        self.batch_size = max(1, batch_size)
+        self.batch_timeout_s = batch_timeout_ms / 1e3
         self.video = VideoStream(seed=seed)
         self.log = EventLog()
         self.embedder = facerec.Embedder()
         rng = np.random.default_rng(seed)
-        gallery = {}
-        for i in range(gallery_size):
-            thumb = rng.uniform(0, 255, (facerec.THUMB, facerec.THUMB, 3))
-            gallery[f"person_{i}"] = self.embedder(thumb.astype(np.float32))
-        self.classifier = facerec.Classifier(gallery)
+        thumbs = rng.uniform(
+            0, 255, (gallery_size, facerec.THUMB, facerec.THUMB, 3))
+        gallery_embs = self.embedder.embed_batch(thumbs.astype(np.float32))
+        self.classifier = facerec.Classifier(
+            {f"person_{i}": gallery_embs[i] for i in range(gallery_size)})
         # broker topics (queues); maxsize models bounded broker capacity
         self.faces_topic: queue.Queue = queue.Queue(maxsize=4096)
         self.frames_topic: queue.Queue = queue.Queue(maxsize=1024)
         self.identities: list = []
         self._ident_lock = threading.Lock()
+        self._stats_lock = threading.Lock()
+        self.batch_stats: dict[str, BatchStats] = {}
         self.detected = 0
         self.ground_truth = 0
         self.matched = 0
+
+    def _merge_stats(self, stage: str, stats: BatchStats) -> None:
+        with self._stats_lock:
+            base = self.batch_stats.get(stage, BatchStats())
+            self.batch_stats[stage] = base.merge(stats)
 
     # ---- stages ------------------------------------------------------------
 
@@ -74,6 +97,12 @@ class StreamingPipeline:
         """Parse + resize (pre-processing only — no AI)."""
         from repro.kernels import ops
         import jax.numpy as jnp
+        # fused mode: push-fed batcher — in-process micro-batching at the
+        # ingest->detect boundary with the same flush policy as the
+        # broker-fed stages
+        batcher = (Batcher(batch_size=self.batch_size,
+                           timeout_s=self.batch_timeout_s)
+                   if self.fused else None)
         for i in range(self.n_frames):
             frame = self.video.next_frame()
             with Timer(self.log, frame.index, "ingest",
@@ -83,50 +112,86 @@ class StreamingPipeline:
                     frame.pixels.shape[0] // 2, frame.pixels.shape[1] // 2))
             item = (frame.index, small, frame.true_boxes, time.perf_counter())
             if self.fused:
-                self._detect_one(item)
+                if (batch := batcher.push(item)) is not None:
+                    self._log_frame_waits(batch)
+                    self._detect_batch(batch)
             else:
                 self.frames_topic.put(item)
-        if not self.fused:
+        if self.fused:
+            if (tail := batcher.flush()) is not None:
+                self._log_frame_waits(tail)
+                self._detect_batch(tail)
+            self._merge_stats("detect", batcher.stats)
+        else:
             self.frames_topic.put(_STOP)
 
-    def _detect_loop(self):
-        while True:
-            item = self.frames_topic.get()
-            if item is _STOP:
-                break
-            rid, small, boxes, t_q = item
-            self.log.log(rid, "wait_frames", t_q, time.perf_counter(),
+    def _log_frame_waits(self, batch):
+        """Per-item wait_frames events: batching linger (fused) or broker
+        transit + linger (three-stage) — the tax stays per-request."""
+        t = time.perf_counter()
+        for rid, small, _boxes, t_q in batch:
+            self.log.log(rid, "wait_frames", t_q, t,
                          payload_bytes=small.nbytes)
-            self._detect_one((rid, small, boxes, t_q))
 
-    def _detect_one(self, item):
-        rid, small, true_boxes, _ = item
-        with Timer(self.log, rid, "detect", payload_bytes=small.nbytes):
-            centers = facerec.detect_faces(small.astype(np.uint8))
-            thumbs = [facerec.crop_thumbnail(small, y, x) for y, x in centers]
-        self.ground_truth += len(true_boxes)
-        self.detected += len(centers)
-        # match detections to ground truth (within 1.5x blob size)
-        for (ty, tx, ts) in true_boxes:
-            if any(abs(cy - ty / 2) < 1.5 * ts and abs(cx - tx / 2) < 1.5 * ts
-                   for cy, cx in centers):
-                self.matched += 1
-        for thumb in thumbs:
-            self.faces_topic.put((rid, thumb, time.perf_counter()))
+    def _detect_loop(self):
+        batcher = Batcher(self.frames_topic, batch_size=self.batch_size,
+                          timeout_s=self.batch_timeout_s, stop=_STOP)
+        for batch in batcher:
+            self._log_frame_waits(batch)
+            self._detect_batch(batch)
+        self._merge_stats("detect", batcher.stats)
+
+    def _detect_batch(self, items):
+        """Detect + crop over a stacked frame batch; per-request events."""
+        B = len(items)
+        smalls = np.stack([it[1] for it in items]).astype(np.uint8)
+        t0 = time.perf_counter()
+        centers_per = facerec.detect_faces_batch(smalls)
+        thumbs_per = facerec.crop_thumbnails_batch(
+            [it[1] for it in items], centers_per)
+        t1 = time.perf_counter()
+        # amortize the batched span back to per-request detect events
+        dt = (t1 - t0) / B
+        for i, (rid, small, _, _) in enumerate(items):
+            self.log.log(rid, "detect", t0 + i * dt, t0 + (i + 1) * dt,
+                         payload_bytes=small.nbytes, batch_size=B)
+        for (rid, _small, true_boxes, _), centers, thumbs in zip(
+                items, centers_per, thumbs_per):
+            self.ground_truth += len(true_boxes)
+            self.detected += len(centers)
+            # match detections to ground truth (within 1.5x blob size)
+            for (ty, tx, ts) in true_boxes:
+                if any(abs(cy - ty / 2) < 1.5 * ts
+                       and abs(cx - tx / 2) < 1.5 * ts
+                       for cy, cx in centers):
+                    self.matched += 1
+            for thumb in thumbs:
+                self.faces_topic.put((rid, thumb, time.perf_counter()))
 
     def _identify_loop(self):
-        while True:
-            item = self.faces_topic.get()
-            if item is _STOP:
-                break
-            rid, thumb, t_q = item
-            self.log.log(rid, "wait", t_q, time.perf_counter(),
-                         payload_bytes=thumb.nbytes)
-            with Timer(self.log, rid, "identify", payload_bytes=thumb.nbytes):
-                emb = self.embedder(thumb)
-                name, sim = self.classifier.identify(emb)
+        batcher = Batcher(self.faces_topic, batch_size=self.batch_size,
+                          timeout_s=self.batch_timeout_s, stop=_STOP)
+        for batch in batcher:
+            t_deq = time.perf_counter()
+            for rid, thumb, t_q in batch:
+                self.log.log(rid, "wait", t_q, t_deq,
+                             payload_bytes=thumb.nbytes)
+            B = len(batch)
+            stack = np.stack([thumb for _, thumb, _ in batch])
+            t0 = time.perf_counter()
+            embs = self.embedder.embed_batch(stack)
+            named = self.classifier.identify_batch(embs)
+            t1 = time.perf_counter()
+            dt = (t1 - t0) / B
+            results = []
+            for i, ((rid, thumb, _), (name, sim)) in enumerate(
+                    zip(batch, named)):
+                self.log.log(rid, "identify", t0 + i * dt, t0 + (i + 1) * dt,
+                             payload_bytes=thumb.nbytes, batch_size=B)
+                results.append((rid, name, sim))
             with self._ident_lock:
-                self.identities.append((rid, name, sim))
+                self.identities.extend(results)
+        self._merge_stats("identify", batcher.stats)
 
     # ---- run ---------------------------------------------------------------
 
@@ -147,4 +212,5 @@ class StreamingPipeline:
         for w in workers:
             w.join()
         return PipelineResult(self.log, self.identities, self.detected,
-                              self.ground_truth, self.matched)
+                              self.ground_truth, self.matched,
+                              dict(self.batch_stats))

@@ -1,0 +1,75 @@
+"""Tiled matmul Pallas TPU kernel — the batched-inference workhorse.
+
+The micro-batched face pipeline turns B per-face MLP calls into one
+(B, d_in) @ (d_in, d_out) matmul; this kernel is the on-device form of
+that contraction. Classic three-level tiling: the grid iterates
+(m, n, k) blocks with k innermost, a float32 VMEM scratch accumulates
+partial products across the k dimension, and the MXU sees one
+(blk_m, blk_k) @ (blk_k, blk_n) dot per step. Inputs are padded
+host-side to block multiples so BlockSpecs stay static; padding is
+sliced off after the call.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def _kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k_blocks: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot(
+        a_ref[...].astype(jnp.float32), b_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ki == n_k_blocks - 1)
+    def _finish():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul(a: jax.Array, b: jax.Array, *, blk_m: int = 128,
+           blk_n: int = 128, blk_k: int = 512,
+           interpret: bool = False) -> jax.Array:
+    """a: (M, K) @ b: (K, N) -> (M, N); accumulation in float32."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, (a.shape, b.shape)
+    # clamp blocks to the (sublane, lane)-aligned problem size
+    blk_m = min(blk_m, _round_up(M, 8))
+    blk_n = min(blk_n, _round_up(N, 128))
+    blk_k = min(blk_k, _round_up(K, 128))
+    Mp, Kp, Np = (_round_up(M, blk_m), _round_up(K, blk_k),
+                  _round_up(N, blk_n))
+    if (Mp, Kp) != (M, K):
+        a = jnp.pad(a, ((0, Mp - M), (0, Kp - K)))
+    if (Kp, Np) != (K, N):
+        b = jnp.pad(b, ((0, Kp - K), (0, Np - N)))
+    n_k = Kp // blk_k
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_k_blocks=n_k),
+        grid=(Mp // blk_m, Np // blk_n, n_k),
+        in_specs=[
+            pl.BlockSpec((blk_m, blk_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((blk_k, blk_n), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((blk_m, blk_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), a.dtype),
+        scratch_shapes=[pltpu.VMEM((blk_m, blk_n), jnp.float32)],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, b)
+    return out[:M, :N]

@@ -366,6 +366,23 @@ def mamba_decode_step(delta, A, Bt, Ct, x, h):
 
 
 # --------------------------------------------------------------------------
+# Matmul (batched-inference contraction for the micro-batched face models)
+# --------------------------------------------------------------------------
+
+def matmul(a: jax.Array, b: jax.Array, *, impl: Impl | None = None,
+           blk_m: int = 128, blk_n: int = 128,
+           blk_k: int = 512) -> jax.Array:
+    """(M, K) @ (K, N) with float32 accumulation."""
+    impl = _resolve(impl)
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels import matmul as mm
+        return mm.matmul(a, b, blk_m=blk_m, blk_n=blk_n, blk_k=blk_k,
+                         interpret=(impl == "pallas_interpret"))
+    # ref and xla coincide: XLA's dot is already the memory-optimal form
+    return _ref.matmul(a, b)
+
+
+# --------------------------------------------------------------------------
 # Bilinear resize (video-analytics pre-processing — the paper's resize tax)
 # --------------------------------------------------------------------------
 

@@ -12,6 +12,12 @@ import jax.numpy as jnp
 NEG_INF = -1e30  # large-negative instead of -inf: keeps softmax NaN-free
 
 
+def matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """(M, K) @ (K, N) with float32 accumulation, result in a.dtype."""
+    return jnp.dot(a.astype(jnp.float32),
+                   b.astype(jnp.float32)).astype(a.dtype)
+
+
 def attention(
     q: jax.Array,          # (B, Sq, H, D)
     k: jax.Array,          # (B, Skv, KV, D)

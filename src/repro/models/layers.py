@@ -39,7 +39,8 @@ def stack_meta(tree, n: int):
 
 def init_params(tree, key: jax.Array, dtype=jnp.float32):
     """Materialize a metadata tree into arrays (deterministic per-path)."""
-    flat, treedef = jax.tree.flatten_with_path(tree, is_leaf=is_meta_leaf)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=is_meta_leaf)
 
     def make(path, p: P):
         dt = jnp.dtype(p.dtype) if p.dtype else dtype

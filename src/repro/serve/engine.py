@@ -15,6 +15,7 @@ same ones the dry-run lowers for the production mesh.
 """
 from __future__ import annotations
 
+import queue
 import time
 from dataclasses import dataclass, field
 
@@ -23,6 +24,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.batching import Batcher
 from repro.core.events import EventLog
 
 
@@ -44,14 +46,23 @@ class ServingEngine:
         self.slots = batch_slots
         self.cache_len = cache_len
         self.log = EventLog()
-        self.queue: list[Request] = []
+        # admission shares the streaming pipeline's Batcher: submissions
+        # land on a topic-like queue and are drained non-blocking into
+        # whatever slots are free each scheduler step
+        self._pending: queue.Queue = queue.Queue()
+        self.admission = Batcher(self._pending, batch_size=batch_slots,
+                                 timeout_s=0.0)
         self.active: list[Request | None] = [None] * batch_slots
         self.greedy = greedy
         self._decode = jax.jit(model.decode_step)
 
     def submit(self, req: Request) -> None:
         req.t_submit = time.perf_counter()
-        self.queue.append(req)
+        self._pending.put(req)
+
+    @property
+    def queue_depth(self) -> int:
+        return self._pending.qsize()
 
     # -- single-sequence prefill per admit; decode batched over slots ------
     def _prefill_one(self, req: Request):
@@ -71,11 +82,12 @@ class ServingEngine:
         finished: list[Request] = []
         caches: list = [None] * self.slots
         steps = 0
-        while (any(self.active) or self.queue) and steps < max_steps:
-            # admit
-            for i in range(self.slots):
-                if self.active[i] is None and self.queue:
-                    req = self.queue.pop(0)
+        while (any(self.active) or not self._pending.empty()) \
+                and steps < max_steps:
+            # admit: drain the submission topic into free slots
+            free = [i for i in range(self.slots) if self.active[i] is None]
+            if free:
+                for i, req in zip(free, self.admission.poll(len(free))):
                     self.log.log(req.rid, "wait", req.t_submit,
                                  time.perf_counter())
                     caches[i], _ = self._prefill_one(req)

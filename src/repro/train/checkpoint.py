@@ -28,7 +28,7 @@ import numpy as np
 
 
 def _flatten(tree):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     return [("/".join(str(k) for k in path), leaf) for path, leaf in flat], treedef
 
 

@@ -1,0 +1,58 @@
+"""Deterministic stand-in for hypothesis when it isn't installed.
+
+The container doesn't ship hypothesis (and the no-new-deps rule forbids
+installing it), so property tests degrade to a single representative
+example per test instead of being skipped: ``given`` binds each
+strategy's smallest/first element and runs the body once. Real
+hypothesis (requirements-dev.txt) takes over automatically when
+present — import via:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ModuleNotFoundError:
+        from hypothesis_fallback import given, settings, st
+"""
+from __future__ import annotations
+
+
+class _Strategy:
+    def __init__(self, example):
+        self.example = example
+
+
+class st:  # noqa: N801 — mirrors `strategies as st`
+    @staticmethod
+    def integers(lo, hi):
+        return _Strategy(lo)
+
+    @staticmethod
+    def floats(lo, hi):
+        return _Strategy(lo)
+
+    @staticmethod
+    def sampled_from(xs):
+        return _Strategy(xs[0])
+
+    @staticmethod
+    def booleans():
+        return _Strategy(False)
+
+
+def settings(**_kw):
+    def deco(fn):
+        return fn
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        def wrapper():
+            return fn(*(s.example for s in strats))
+        # no functools.wraps: pytest would follow __wrapped__ and treat
+        # the example parameters as fixtures
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        # keep @pytest.mark.* applied beneath @given working
+        wrapper.pytestmark = list(getattr(fn, "pytestmark", []))
+        return wrapper
+    return deco

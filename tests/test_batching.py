@@ -1,0 +1,181 @@
+"""Micro-batching subsystem: Batcher semantics, batched model paths vs
+per-item oracles, and end-to-end batched-pipeline equivalence."""
+import queue
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import facerec
+from repro.core.batching import Batcher, BatchStats
+from repro.core.pipeline import StreamingPipeline
+from repro.data.video import VideoStream
+
+STOP = object()
+
+
+# ---- Batcher ---------------------------------------------------------------
+
+def test_batcher_size_flush_and_stop_flush():
+    q = queue.Queue()
+    for i in range(10):
+        q.put(i)
+    q.put(STOP)
+    b = Batcher(q, batch_size=4, timeout_s=10.0, stop=STOP)
+    batches = list(b)
+    assert batches == [[0, 1, 2, 3], [4, 5, 6, 7], [8, 9]]
+    assert b.stats.n_batches == 3 and b.stats.n_items == 10
+    assert b.stats.flush_size == 2 and b.stats.flush_stop == 1
+    assert b.next_batch() is None          # stays stopped
+
+
+def test_batcher_timeout_flush():
+    q = queue.Queue()
+    b = Batcher(q, batch_size=8, timeout_s=0.05, stop=STOP)
+
+    def produce():
+        q.put("a")
+        q.put("b")
+        time.sleep(0.3)                    # longer than the linger
+        q.put(STOP)
+
+    t = threading.Thread(target=produce)
+    t.start()
+    first = b.next_batch()
+    t.join()
+    assert first == ["a", "b"]
+    assert b.stats.flush_timeout == 1
+    assert b.next_batch() is None
+
+
+def test_batcher_poll_is_nonblocking():
+    q = queue.Queue()
+    b = Batcher(q, batch_size=4, stop=STOP)
+    assert b.poll() == []                  # empty queue: returns immediately
+    for i in range(3):
+        q.put(i)
+    assert b.poll(2) == [0, 1]
+    assert b.poll() == [2]
+
+
+def test_batcher_push_flush():
+    b = Batcher(batch_size=3, timeout_s=10.0)
+    assert b.push(1) is None and b.push(2) is None
+    assert b.push(3) == [1, 2, 3]                  # size bound
+    assert b.push(4) is None
+    assert b.flush() == [4]                        # end-of-stream partial
+    assert b.flush() is None
+    assert b.stats.flush_size == 1 and b.stats.flush_stop == 1
+
+
+def test_batcher_push_linger_bound():
+    b = Batcher(batch_size=100, timeout_s=0.01)
+    assert b.push("a") is None
+    time.sleep(0.05)
+    assert b.push("b") == ["a", "b"]               # linger tripped at push
+    assert b.stats.flush_timeout == 1
+
+
+def test_batcher_guards_misuse():
+    with pytest.raises(ValueError):                # no sentinel -> no end
+        iter(Batcher(queue.Queue(), batch_size=2))
+    with pytest.raises(ValueError):                # push-fed has no source
+        Batcher(batch_size=2).next_batch()
+    with pytest.raises(ValueError):
+        Batcher(batch_size=2).poll()
+
+
+def test_batch_stats_merge():
+    a = BatchStats(n_batches=2, n_items=5, flush_size=1, flush_timeout=1)
+    c = a.merge(BatchStats(n_batches=1, n_items=3, flush_stop=1))
+    assert (c.n_batches, c.n_items, c.flush_stop) == (3, 8, 1)
+    assert c.mean_batch_size == pytest.approx(8 / 3)
+
+
+# ---- batched model paths vs per-item oracles --------------------------------
+
+@pytest.fixture(scope="module")
+def frames():
+    vs = VideoStream(seed=3)
+    return [vs.next_frame().pixels for _ in range(6)]
+
+
+def test_detect_batch_matches_single(frames):
+    stack = np.stack(frames)
+    batched = facerec.detect_faces_batch(stack)
+    singles = [facerec.detect_faces(f) for f in frames]
+    assert batched == singles
+
+
+def test_crop_batch_matches_single(frames):
+    centers = facerec.detect_faces_batch(np.stack(frames))
+    batched = facerec.crop_thumbnails_batch(
+        [f.astype(np.float32) for f in frames], centers)
+    for frame, cs, thumbs in zip(frames, centers, batched):
+        assert len(thumbs) == len(cs)
+        for (y, x), thumb in zip(cs, thumbs):
+            single = facerec.crop_thumbnail(frame.astype(np.float32), y, x)
+            np.testing.assert_allclose(thumb, single, rtol=1e-5, atol=1e-4)
+
+
+def test_embed_and_identify_batch_match_single():
+    rng = np.random.default_rng(0)
+    thumbs = rng.uniform(0, 255, (5, facerec.THUMB, facerec.THUMB, 3)) \
+        .astype(np.float32)
+    emb = facerec.Embedder()
+    batched = emb.embed_batch(thumbs)
+    assert batched.shape == (5, facerec.EMBED_DIM)
+    np.testing.assert_allclose(np.linalg.norm(batched, axis=1), 1.0,
+                               rtol=1e-5)
+    for i in range(5):
+        np.testing.assert_allclose(batched[i], emb(thumbs[i]),
+                                   rtol=1e-5, atol=1e-6)
+    gal = {f"p{i}": emb(rng.uniform(0, 255, thumbs.shape[1:])
+                        .astype(np.float32)) for i in range(4)}
+    clf = facerec.Classifier(gal)
+    pairs = clf.identify_batch(batched)
+    assert len(pairs) == 5
+    for e, (name, sim) in zip(batched, pairs):
+        n1, s1 = clf.identify(e)
+        assert n1 == name and s1 == pytest.approx(sim)
+
+
+# ---- end-to-end pipeline equivalence ---------------------------------------
+
+def _ids(result):
+    return sorted((rid, name) for rid, name, _ in result.identities)
+
+
+@pytest.mark.parametrize("fused", [True, False])
+def test_pipeline_batched_equals_unbatched(fused):
+    kw = dict(n_frames=20, fuse_ingest_detect=fused,
+              n_identify_workers=2, seed=0, batch_timeout_ms=100.0)
+    r1 = StreamingPipeline(batch_size=1, **kw).run()
+    r8 = StreamingPipeline(batch_size=8, **kw).run()
+    assert (r8.detected, r8.matched, r8.ground_truth) == \
+        (r1.detected, r1.matched, r1.ground_truth)
+    assert _ids(r8) == _ids(r1)
+
+
+def test_pipeline_batched_per_request_events_survive():
+    r = StreamingPipeline(n_frames=20, seed=0, batch_size=8,
+                          batch_timeout_ms=100.0).run()
+    waits = [e for e in r.log.events if e.stage == "wait"]
+    idents = [e for e in r.log.events if e.stage == "identify"]
+    # every face logs its own queue wait and its own identify slice
+    assert len(waits) == r.detected == len(idents)
+    assert all(e.meta.get("batch_size", 0) >= 1 for e in idents)
+    assert any(e.meta.get("batch_size", 0) > 1 for e in idents)
+    stats = r.batch_stats["identify"]
+    assert stats.n_items == r.detected
+    assert stats.mean_batch_size > 1.0
+
+
+def test_pipeline_timeout_flush_drains_stragglers():
+    # faces arrive slower than the batch fills -> linger must flush
+    r = StreamingPipeline(n_frames=12, seed=0, batch_size=64,
+                          batch_timeout_ms=2.0).run()
+    assert len(r.identities) == r.detected         # nothing stranded
+    stats = r.batch_stats["identify"]
+    assert stats.flush_timeout + stats.flush_stop >= 1

@@ -3,7 +3,11 @@ claims, Amdahl analytics, queueing stability, and the TCO tables."""
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:      # deterministic single-example shim
+    from hypothesis_fallback import given, settings, st
 
 from repro.core import acceleration as acc
 from repro.core.broker import BrokerConfig

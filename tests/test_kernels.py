@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:      # deterministic single-example shim
+    from hypothesis_fallback import given, settings, st
 
 from repro.kernels import ops, ref
 from repro.kernels.decode_attention import decode_attention
@@ -220,3 +223,31 @@ def test_attention_xla_chunk_invariance():
     a = ops.attention(q, k, v, causal=True, impl="xla", q_chunk=64)
     b = ops.attention(q, k, v, causal=True, impl="xla", q_chunk=512)
     np.testing.assert_allclose(a, b, atol=2e-5, rtol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# matmul
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("M,K,N,blk", [
+    (8, 128, 128, 128),      # single tile
+    (128, 512, 256, 128),    # multi-tile, k accumulation
+    (13, 200, 37, 128),      # ragged: host-side padding on every dim
+    (3072, 256, 128, 128),   # the Embedder's layer-1 shape (d_in x 256)
+])
+def test_matmul_vs_ref(M, K, N, blk):
+    a = _rand((M, K), seed=1, scale=0.5)
+    b = _rand((K, N), seed=2, scale=0.5)
+    out = ops.matmul(a, b, impl="pallas_interpret", blk_m=blk, blk_n=blk,
+                     blk_k=blk)
+    np.testing.assert_allclose(out, ref.matmul(a, b), atol=1e-4, rtol=1e-4)
+
+
+def test_matmul_small_blocks_accumulate():
+    """k-loop accumulation across many blocks stays exact vs one block."""
+    a = _rand((16, 1024), seed=3)
+    b = _rand((1024, 128), seed=4)
+    small = ops.matmul(a, b, impl="pallas_interpret", blk_k=128)
+    one = ops.matmul(a, b, impl="pallas_interpret", blk_k=1024)
+    np.testing.assert_allclose(small, one, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(small, ref.matmul(a, b), atol=1e-4, rtol=1e-4)
