@@ -1,0 +1,76 @@
+"""§5.1 on MEASURED rooflines: accelerator speedup → residual tax.
+
+Fig 9 projects Amdahl speedups from the paper's measured per-stage
+constants. This sweep recomputes the same curves from rooflines this
+container actually measures: each calibration fixture (matmul, scan,
+nested scan, DUS carry, attention) is lowered live, costed by the
+calibrated HLO walker, and split into an accelerable compute term vs a
+memory/collective tax term on TPU-v5e constants. Dry-run artifacts
+(``python -m repro.launch.dryrun --all``), when present, contribute one
+row per (arch × shape) cell the same way.
+
+Rows report, per accelerator speedup s: the overall Amdahl speedup and
+the residual tax fraction — the share of remaining time that is
+infrastructure tax once the AI runs s× faster (→1 as s→∞; the paper's
+central observation, now on measured numbers instead of constants).
+"""
+from __future__ import annotations
+
+from benchmarks.common import row, timed
+
+SPEEDUPS = (1, 2, 4, 8, 16, 32, 64)
+
+
+def _fixture_profiles():
+    from repro.core import acceleration as acc
+    from repro.roofline import calibrate, hlo_cost, hw
+
+    profiles = []
+    for fx in calibrate.FIXTURES:
+        compiled = fx.build()
+        cost = hlo_cost.analyze(compiled.as_text())
+        profiles.append(acc.profile_from_roofline(
+            fx.name,
+            t_compute=cost.flops / hw.PEAK_FLOPS_BF16,
+            t_memory=cost.hbm_bytes / hw.HBM_BW,
+            t_collective=cost.coll_bytes / hw.ICI_BW))
+    return profiles
+
+
+def _artifact_profiles():
+    from benchmarks.roofline_table import load_cells
+    from repro.core import acceleration as acc
+
+    return [acc.profile_from_roofline(
+                f"{d['arch']}__{d['shape']}", d["t_compute"],
+                d["t_memory"], d["t_collective"])
+            for d in load_cells()]
+
+
+def _sweep_row(profile, us):
+    from repro.core import acceleration as acc
+
+    pts = ";".join(f"{s}x:sp={sp:.2f},tax={tax:.2f}"
+                   for s, sp, tax in acc.roofline_sweep(profile, SPEEDUPS))
+    return row(f"fig_roofline/{profile.name}", us,
+               f"ai_frac={profile.ai_fraction:.3f};"
+               f"asymptote={min(profile.asymptote, 1e9):.2f};{pts}")
+
+
+def run() -> list[str]:
+    out = []
+    profiles, us = timed(_fixture_profiles)
+    per = us / max(len(profiles), 1)
+    for p in profiles:
+        out.append(_sweep_row(p, per))
+    art = _artifact_profiles()
+    for p in art:
+        out.append(_sweep_row(p, 0.0))
+    if not art:
+        out.append(row("fig_roofline/artifacts", 0.0,
+                       "none (run: python -m repro.launch.dryrun --all)"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,39 @@
+"""CLI for the cost-model calibration harness.
+
+Lowers the fixture battery (matmul, scan, nested scan, DUS carry,
+attention), compares ``hlo_cost.analyze()`` against XLA's
+``compiled.cost_analysis()`` term by term, and exits non-zero if any
+gated fixture's FLOP delta exceeds the tolerance. Run:
+
+    PYTHONPATH=src python scripts/calibrate_cost.py [--tolerance 0.05]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tolerance", type=float, default=0.05,
+                    help="max |relative flops delta| on gated fixtures")
+    args = ap.parse_args()
+
+    from repro.roofline import calibrate
+
+    rows = calibrate.calibrate()
+    for line in calibrate.report(rows, tolerance=args.tolerance):
+        print(line)
+    bad = [r.name for r in rows if not r.ok(args.tolerance)]
+    if bad:
+        print(f"calibrate: FAIL — flops delta > {args.tolerance:.0%} on: "
+              + ", ".join(bad), file=sys.stderr)
+        return 1
+    gated = sum(1 for r in rows if r.gate)
+    print(f"calibrate: OK ({gated}/{len(rows)} fixtures gated at "
+          f"{args.tolerance:.0%}, all within tolerance)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

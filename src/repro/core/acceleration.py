@@ -38,6 +38,38 @@ def amdahl_curve(profile: StageProfile, speedups) -> list[tuple[float, float]]:
     return [(s, profile.amdahl_speedup(s)) for s in speedups]
 
 
+def residual_tax_fraction(profile: StageProfile, s: float) -> float:
+    """Fraction of the REMAINING time that is tax after the AI part runs
+    s× faster — the paper's central quantity: accelerating the AI makes
+    the supporting work dominate. At s→∞ this →1 for any profile with
+    ai_fraction < 1."""
+    f = profile.ai_fraction
+    denom = (1.0 - f) + f / s
+    return (1.0 - f) / denom if denom else 0.0
+
+
+def roofline_sweep(profile: StageProfile, speedups
+                   ) -> list[tuple[float, float, float]]:
+    """(s, overall Amdahl speedup, residual tax fraction) per point.
+
+    ``profile`` may come from the paper's measured constants OR from a
+    measured roofline (``Roofline.stage_profile()`` /
+    :func:`profile_from_roofline`) — the latter is what
+    ``benchmarks/fig_roofline_sweep.py`` feeds in, replacing the paper
+    constants with this container's calibrated cost model."""
+    return [(s, profile.amdahl_speedup(s), residual_tax_fraction(profile, s))
+            for s in speedups]
+
+
+def profile_from_roofline(name: str, t_compute: float, t_memory: float,
+                          t_collective: float = 0.0) -> StageProfile:
+    """A measured Amdahl profile from roofline terms: the compute term is
+    the accelerable "AI" share; memory + collective terms are the
+    infrastructure tax an accelerator does not shrink."""
+    tot = t_compute + t_memory + t_collective
+    return StageProfile(name, t_compute / tot if tot else 0.0)
+
+
 def emulated_times(t_measured: dict[str, float], s: float,
                    ai_only: bool = False,
                    profiles: dict[str, StageProfile] | None = None

@@ -44,6 +44,9 @@ class Roofline:
     bytes_per_device: float = 0.0
     peak_memory_ok: bool = True
     xla_cost: dict = field(default_factory=dict)
+    # cross-calibration vs XLA's count-a-while-body-once convention:
+    # analyze(count_trips=False) compared to cost_analysis() per term
+    calibration: dict = field(default_factory=dict)
     # Pallas-kernel traffic substitution (§Perf iteration "flash"):
     # flash_bytes = HBM traffic of the XLA-path attention/scan regions
     # (tagged "flashable_*" scopes); kernel_bytes = what the validated
@@ -89,6 +92,22 @@ class Roofline:
     def roofline_fraction(self) -> float:
         return self.t_ideal / self.t_bound if self.t_bound else 0.0
 
+    @property
+    def ai_fraction(self) -> float:
+        """Accelerable share of the serialized term sum: the compute term
+        is what an s×-faster accelerator shrinks; memory + collective
+        terms are the infrastructure tax that stays. This is the measured
+        analogue of the paper's per-stage ``ai_fraction`` constants and
+        feeds :func:`repro.core.acceleration.profile_from_roofline`."""
+        tot = self.t_compute + self.t_memory + self.t_collective
+        return self.t_compute / tot if tot else 0.0
+
+    def stage_profile(self):
+        """This cell as an Amdahl stage profile (measured, not paper)."""
+        from repro.core import acceleration
+        return acceleration.StageProfile(
+            f"{self.arch}:{self.shape}", self.ai_fraction)
+
     # ---- Pallas-kernel variant (same compiled artifact, substituted
     # traffic for the tagged regions) ----
     @property
@@ -117,6 +136,7 @@ class Roofline:
                  t_bound=self.t_bound, t_ideal=self.t_ideal,
                  useful_flops_ratio=self.useful_flops_ratio,
                  roofline_fraction=self.roofline_fraction,
+                 ai_fraction=self.ai_fraction,
                  t_memory_pallas=self.t_memory_pallas,
                  t_bound_pallas=self.t_bound_pallas,
                  bottleneck_pallas=self.bottleneck_pallas,
@@ -190,12 +210,24 @@ def kernel_ideal_bytes(cfg, shape, chips: int) -> float:
 def from_compiled(arch: str, shape_name: str, mesh_name: str, chips: int,
                   compiled, cfg, shape, *, param_bytes: float = 0.0,
                   cache_bytes: float = 0.0) -> Roofline:
-    cost = hlo_cost.analyze(compiled.as_text())
+    cost, cost_flat = hlo_cost.analyze_pair(compiled.as_text())
     xla = compiled.cost_analysis()
     if isinstance(xla, list):
         xla = xla[0]
     xla_small = {k: float(xla[k]) for k in ("flops", "bytes accessed")
                  if k in xla}
+    # per-artifact calibration record: our count-body-once flops vs XLA's
+    # (the trip-multiplied number is what the roofline terms consume).
+    # flops_delta is None when the backend reports no flops — "no
+    # comparison ran", not "perfect agreement".
+    xf = xla_small.get("flops", 0.0)
+    calibration = {
+        "flops_untripped": cost_flat.flops,
+        "xla_flops": xf,
+        "flops_delta": (cost_flat.flops - xf) / xf if xf else None,
+        "trip_multiplier": (cost.flops / cost_flat.flops
+                            if cost_flat.flops else 1.0),
+    }
     mem = compiled.memory_analysis()
     bpd = 0.0
     ok = True
@@ -215,5 +247,6 @@ def from_compiled(arch: str, shape_name: str, mesh_name: str, chips: int,
         ideal_bytes=ideal_bytes_estimate(
             cfg, shape, param_bytes, cache_bytes),
         bytes_per_device=bpd, peak_memory_ok=ok, xla_cost=xla_small,
+        calibration=calibration,
         flash_bytes=cost.flash_bytes,
         kernel_bytes=kernel_ideal_bytes(cfg, shape, chips))

@@ -1,0 +1,172 @@
+"""Cross-calibration of :mod:`repro.roofline.hlo_cost` against XLA.
+
+The cost model is only trustworthy if it agrees with the compiler's own
+accounting where their conventions overlap. This harness lowers a
+battery of jitted fixture programs (matmul, scan, nested scan, a
+DUS-carry scan, an attention block — the shapes the repo's roofline
+terms are built from), runs ``analyze()`` on the optimized HLO text,
+and compares it to ``compiled.cost_analysis()`` per term.
+
+Conventions differ in exactly one place: XLA counts a ``while`` body
+ONCE; our model multiplies by ``known_trip_count``. So the comparable
+quantity is ``analyze(text, count_trips=False)`` — the report carries
+both, plus the trip-multiplied numbers the rooflines actually consume.
+
+``scripts/calibrate_cost.py`` is the CLI; the property test in
+``tests/test_calibration.py`` gates dot-FLOP agreement at 5%.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from repro.roofline import hlo_cost
+
+
+def _sd(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _matmul():
+    f = jax.jit(lambda a, b: a @ b)
+    return f.lower(_sd((32, 64)), _sd((64, 128))).compile()
+
+
+def _scan():
+    def f(xs, w):
+        def body(c, x):
+            return jnp.tanh(c @ w) + x, ()
+        c, _ = jax.lax.scan(body, xs[0], xs)
+        return c
+    return jax.jit(f).lower(_sd((7, 8, 16)), _sd((16, 16))).compile()
+
+
+def _nested_scan():
+    def f(xs, w):
+        def outer(c, x):
+            def inner(ci, xi):
+                return ci @ w, ()
+            ci, _ = jax.lax.scan(inner, c, x)
+            return ci, ()
+        c, _ = jax.lax.scan(outer, xs[0, 0], xs)
+        return c
+    return jax.jit(f).lower(_sd((3, 5, 8, 8)), _sd((8, 8))).compile()
+
+
+def _dus_carry():
+    def f(buf, xs):
+        def body(b, i):
+            return jax.lax.dynamic_update_slice_in_dim(
+                b, xs[i][None], i, axis=0), ()
+        b, _ = jax.lax.scan(body, buf, jnp.arange(16))
+        return b
+    return jax.jit(f).lower(_sd((16, 1024)), _sd((16, 1024))).compile()
+
+
+def _attention():
+    from repro.kernels import ops
+
+    def f(q, k, v):
+        return ops.attention(q, k, v, causal=True, impl="xla")
+    return jax.jit(f).lower(_sd((2, 128, 4, 32)), _sd((2, 128, 2, 32)),
+                            _sd((2, 128, 2, 32))).compile()
+
+
+@dataclass(frozen=True)
+class Fixture:
+    name: str
+    build: object                   # () -> compiled
+    gate: str = "flops"             # term the 5% gate applies to ("" = none)
+    note: str = ""
+
+
+FIXTURES = (
+    Fixture("matmul", _matmul, note="single dot, no control flow"),
+    Fixture("scan", _scan, note="while trip=7, dot+tanh body"),
+    Fixture("nested_scan", _nested_scan, note="while trip=3 x while trip=5"),
+    Fixture("dus_carry", _dus_carry, gate="",
+            note="in-place DUS carry; flops ~0, bytes-model fixture"),
+    Fixture("attention", _attention, note="qk/av dots + softmax block"),
+)
+
+
+def xla_cost_terms(compiled) -> dict:
+    """{'flops', 'bytes'} from ``compiled.cost_analysis()``."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0))}
+
+
+@dataclass
+class CalibRow:
+    name: str
+    gate: str
+    note: str
+    ours: dict = field(default_factory=dict)      # trip-multiplied terms
+    ours_flat: dict = field(default_factory=dict)  # count_trips=False terms
+    xla: dict = field(default_factory=dict)
+    deltas: dict = field(default_factory=dict)     # relative, vs ours_flat
+
+    @property
+    def gate_delta(self) -> float | None:
+        if not self.gate:
+            return None
+        return self.deltas.get(self.gate)
+
+    def ok(self, tolerance: float = 0.05) -> bool:
+        d = self.gate_delta
+        return d is None or abs(d) <= tolerance
+
+
+def _rel(ours: float, theirs: float) -> float:
+    if theirs == 0.0:
+        return 0.0 if ours == 0.0 else float("inf")
+    return (ours - theirs) / theirs
+
+
+def calibrate_one(fx: Fixture) -> CalibRow:
+    compiled = fx.build()
+    tripped, flat = hlo_cost.analyze_pair(compiled.as_text())
+    x = xla_cost_terms(compiled)
+    row = CalibRow(name=fx.name, gate=fx.gate, note=fx.note)
+    row.ours = {"dot_flops": tripped.dot_flops, "flops": tripped.flops,
+                "bytes": tripped.hbm_bytes}
+    row.ours_flat = {"dot_flops": flat.dot_flops, "flops": flat.flops,
+                     "bytes": flat.hbm_bytes}
+    row.xla = x
+    row.deltas = {"flops": _rel(flat.flops, x["flops"]),
+                  "dot_flops": _rel(flat.dot_flops, x["flops"]),
+                  "bytes": _rel(flat.hbm_bytes, x["bytes"])}
+    return row
+
+
+def calibrate(fixtures=FIXTURES) -> list:
+    return [calibrate_one(fx) for fx in fixtures]
+
+
+def report(rows, tolerance: float = 0.05) -> list:
+    """Human-readable per-term delta table (one string per line)."""
+    out = [f"{'fixture':<12} {'ours(dot)':>12} {'ours(flops)':>12} "
+           f"{'xla(flops)':>12} {'d_flops':>8} {'ours(B)':>12} "
+           f"{'xla(B)':>12} {'d_bytes':>8}  gate"]
+    for r in rows:
+        verdict = "-" if not r.gate else \
+            ("OK" if r.ok(tolerance) else "FAIL")
+        out.append(
+            f"{r.name:<12} {r.ours_flat['dot_flops']:>12.4g} "
+            f"{r.ours_flat['flops']:>12.4g} {r.xla['flops']:>12.4g} "
+            f"{r.deltas['flops']:>+8.1%} {r.ours_flat['bytes']:>12.4g} "
+            f"{r.xla['bytes']:>12.4g} {r.deltas['bytes']:>+8.1%}  "
+            f"{verdict}")
+        if r.ours["flops"] != r.ours_flat["flops"]:
+            mult = (r.ours["flops"] / r.ours_flat["flops"]
+                    if r.ours_flat["flops"] else 0.0)
+            out.append(f"{'':<12} trip-multiplied: "
+                       f"flops={r.ours['flops']:.4g} "
+                       f"bytes={r.ours['bytes']:.4g} "
+                       f"(x{mult:.1f} over XLA's count-body-once)")
+    return out

@@ -1,27 +1,45 @@
-"""Trip-count-aware cost analysis of optimized HLO text.
+"""Trip-count-aware cost analysis of optimized HLO (phase 2).
 
 ``compiled.cost_analysis()`` counts a ``while`` body ONCE, which silently
 undercounts every scanned-layer model by its depth (and collectives inside
-the scan by the same factor). This walker parses the post-partitioning HLO
-module, computes per-computation costs (dot FLOPs, elementwise FLOPs,
-HBM-boundary bytes, collective bytes by kind), and rolls them up through
-the call graph: ``while`` multiplies by its ``known_trip_count``,
-fusions/calls add their callee once.
+the scan by the same factor). This pass runs over the typed IR built by
+:mod:`repro.roofline.hlo_parser`, computes per-computation costs (dot
+FLOPs, elementwise FLOPs, HBM-boundary bytes, collective bytes by kind),
+and rolls them up through the call graph: ``while`` multiplies its body
+and condition by ``known_trip_count``; fusions/calls add their callee
+once — so trip counts compose multiplicatively through any nesting,
+including a ``while`` reached via a wrapping fusion or call.
 
-Scope notes:
-  * dot FLOPs are exact (2 * prod(out) * prod(contracted lhs dims)).
+Cost rules (each one unit-tested against golden HLO in
+``tests/fixtures/`` and cross-calibrated against XLA's own
+``cost_analysis()`` by :mod:`repro.roofline.calibrate`):
+
+  * dot FLOPs are exact: ``2 * prod(out_dims) * prod(lhs contracting
+    dims)`` — batch dims already live in the output shape. The lhs shape
+    comes from the inline operand type; legacy text without inline types
+    resolves the operand through convert/bitcast/copy chains.
   * elementwise FLOPs cover the common float ops (1 flop/elem) — this is
     what makes SSM/RWKV scans visible, which are elementwise-dominated.
+    Fusion internals contribute their FLOPs via the ``calls=`` edge while
+    bytes are charged only at the fusion boundary.
   * bytes are an HBM-traffic model: operands + outputs at fusion/call-site
-    boundaries (internals of a fusion are on-chip).
+    boundaries (internals of a fusion are on-chip). Fusions are
+    slice-aware: a parameter only read through (dynamic-)slice charges
+    the slice; a dynamic-update-slice root aliases its buffer in place
+    and charges the update slice read+write (XLA:CPU's bf16-legalization
+    ``convert`` wrappers around the root are unwrapped first).
   * collective bytes use the op's full (gathered) shape for all-gather /
     all-reduce; reduce-scatter/all-to-all use operand bytes when known.
+
+``analyze(text, count_trips=False)`` disables the while multiplication,
+which reproduces XLA's count-the-body-once convention — that is the
+comparable quantity for calibration against ``cost_analysis()``.
 """
 from __future__ import annotations
 
-import json
-import re
 from dataclasses import dataclass, field
+
+from repro.roofline import hlo_parser as hp
 
 _COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                "collective-permute")
@@ -30,37 +48,20 @@ _ELEMENTWISE = {
     "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
     "exponential", "tanh", "rsqrt", "sqrt", "log", "negate", "abs",
     "exponential-minus-one", "log-plus-one", "logistic", "select", "floor",
-    "ceil", "round-nearest-afz", "cosine", "sine", "sign",
+    "ceil", "round-nearest-afz", "cosine", "sine", "sign", "clamp",
+    "compare", "and", "or", "not", "xor",
 }
 
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
-    "f8e4m3fn": 1, "f8e5m2": 1, "token": 0, "opaque": 0,
-}
+# opcodes that call sub-computations and form an HBM boundary
+_CALL_LIKE = {"call", "fusion", "custom-call", "reduce", "sort", "map",
+              "reduce-window", "scatter", "select-and-scatter",
+              "conditional", "async-start"}
 
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
-_OPCODE_RE = re.compile(r"^((?:\([^)]*\)|[\w\[\],{}\- ])*?)\s*([\w\-]+)\(")
-_OPERANDS_RE = re.compile(r"%([\w.\-]+)")
-_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
-_CALLEE_RE = re.compile(r"(?:body|to_apply|calls)=%?([\w.\-]+)")
-_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
-
-
-def _shape_info(type_str: str):
-    """(elements, bytes) summed over every tensor literal in the string."""
-    elems = byts = 0
-    for dt, dims in _SHAPE_RE.findall(type_str):
-        if dt not in _DTYPE_BYTES:
-            continue
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                n *= int(d)
-        elems += n
-        byts += n * _DTYPE_BYTES[dt]
-    return elems, byts
+# data movement that genuinely crosses HBM (copy/convert are CPU-lowering
+# artifacts a TPU fuses away and charge nothing)
+_MOVE_RW = {"transpose", "concatenate", "gather", "pad"}
+_MOVE_FREE = {"copy", "reshape", "broadcast", "slice", "dynamic-slice",
+              "iota", "convert", "bitcast", "bitcast-convert", "reverse"}
 
 
 @dataclass
@@ -94,230 +95,145 @@ class Cost:
                 "coll_bytes": self.coll_bytes, "coll": dict(self.coll)}
 
 
-@dataclass
-class _Comp:
-    name: str
-    lines: list
-    symbols: dict           # op name -> type string
-    local: Cost | None = None
-    calls: list = None      # (callee, mult) pairs
+def _operand_bytes(comp: hp.Computation, instr: hp.Instruction) -> float:
+    return float(sum(
+        hp._leaf_bytes(comp.operand_shapes(instr, i))
+        for i in range(len(instr.operands))))
 
 
-def _split_computations(text: str) -> dict[str, _Comp]:
-    comps: dict[str, _Comp] = {}
-    cur = None
-    for raw in text.splitlines():
-        line = raw.rstrip()
-        s = line.strip()
-        if cur is None:
-            m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)$", s)
-            if m and s.endswith("{"):
-                name = m.group(1)
-                cur = _Comp(name=name, lines=[], symbols={}, calls=[])
-                if raw.lstrip().startswith("ENTRY"):
-                    cur.is_entry = True
-                # header params: "a.1: f32[8,16], b: (s32[], f32[2])"
-                hdr = s[s.index("(") + 1:]
-                for pm in re.finditer(r"([\w.\-]+)\s*:\s*((?:\([^)]*\)|[\w\[\],{} ]+))",
-                                      hdr):
-                    cur.symbols[pm.group(1)] = pm.group(2)
-                comps[name] = cur
-            continue
-        if s == "}":
-            cur = None
-            continue
-        cur.lines.append(s)
-        dm = _DEF_RE.match(s)
-        if dm:
-            cur.symbols[dm.group(1)] = dm.group(2)
-    return comps
-
-
-def _dot_flops(line: str, out_elems: int, symbols: dict) -> float:
-    m = re.search(r"dot\(\s*%([\w.\-]+)", line)
+def _dot_flops(comp: hp.Computation, instr: hp.Instruction) -> float:
+    """2 * prod(out) * prod(contracted lhs dims); the lhs shape comes from
+    the inline operand type or the operand's defining instruction."""
     k = 1
-    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
-    if m and cm and m.group(1) in symbols:
-        sh = _SHAPE_RE.search(symbols[m.group(1)])
-        if sh and sh.group(2):
-            dims = [int(d) for d in sh.group(2).split(",")]
-            for ci in cm.group(1).split(","):
-                if ci:
-                    idx = int(ci)
-                    if idx < len(dims):
-                        k *= dims[idx]
-    return 2.0 * out_elems * k
+    lhs_shapes = comp.operand_shapes(instr, 0)
+    if lhs_shapes:
+        dims = lhs_shapes[0].dims
+        for ci in instr.lhs_contracting:
+            if ci < len(dims):
+                k *= dims[ci]
+    return 2.0 * instr.out_elems * k
 
 
-def _fusion_traffic(callee: _Comp, out_elems: int, out_bytes: int):
-    """Slice-aware HBM traffic of a fusion.
+def _fusion_traffic(callee: hp.Computation, out_elems: int, out_bytes: int):
+    """Slice-aware HBM traffic of a fusion: (in_bytes, out_bytes).
 
     Scan bodies address their carries with dynamic-slice (read one layer
     of a stacked buffer) and dynamic-update-slice (write one layer back,
     aliased in place). Charging the full stacked operand/output per
     iteration over-counts by the layer count, so:
-      * a param whose only use is a dynamic-slice charges the slice;
+      * a param only read through (dynamic-)slice charges the slice;
       * a root that is a DUS (possibly wrapped in XLA:CPU's bf16
-        legalization converts) charges the update slice as the output.
-    Returns (in_bytes, out_bytes) or None if the callee is unparseable."""
-    if not callee.lines:
-        return None
-    # ---- output side ----
-    root = None
-    for line in callee.lines:
-        if line.startswith("ROOT"):
-            root = line
-            break
+        legalization converts) charges the update slice as the output,
+        its buffer operand aliases in place (no read), and the update
+        values count as the read side.
+    Returns None if the callee has no parseable root."""
+    root = callee.root
     if root is None:
         return None
+    # unwrap XLA:CPU's bf16-legalization convert/copy wrappers at the root
+    target = callee.resolve(
+        root.name, through=frozenset({"convert", "bitcast", "copy"})) or root
+    root_is_dus = target.opcode == "dynamic-update-slice"
+
     out_traffic = float(out_bytes)
-    target = root
-    if " convert(" in root:
-        ops = _OPERANDS_RE.findall(root[root.index(" convert("):])
-        if ops and ops[0] in callee.symbols:
-            target = callee.symbols[ops[0]]
-    if "dynamic-update-slice(" in target:
-        ops = _OPERANDS_RE.findall(
-            target[target.index("dynamic-update-slice("):])
-        if len(ops) >= 2:
-            upd_elems, _ = _shape_info(callee.symbols.get(ops[1], ""))
-            elt = (out_bytes / out_elems) if out_elems else 4.0
-            out_traffic = upd_elems * elt
-    # ---- input side ----
-    sliced_params: dict[str, float] = {}
-    param_bytes: dict[str, float] = {}
-    alias_src: dict[str, str] = {}      # convert/bitcast chains
-    for line in callee.lines:
-        dm = _DEF_RE.match(line)
-        if not dm:
-            continue
-        name, rest = dm.group(1), dm.group(2)
-        if " parameter(" in rest:
-            param_bytes[name] = _shape_info(rest)[1]
-            continue
-        ops = _OPERANDS_RE.findall(rest)
-        if (" convert(" in rest or " bitcast(" in rest
-                or " copy(" in rest or " reshape(" in rest) and ops:
-            alias_src[name] = ops[0]
+    if root_is_dus and len(target.operands) >= 2:
+        upd = target.operands[1]
+        upd_bytes = upd.bytes or hp._leaf_bytes(callee.shapes_of(upd.ref))
+        if upd_bytes:
+            out_traffic = float(upd_bytes)
 
-    def root_param(name: str) -> str | None:
-        seen = 0
-        while name in alias_src and seen < 10:
-            name = alias_src[name]
-            seen += 1
-        return name if name in param_bytes else None
-
-    for line in callee.lines:
-        dm = _DEF_RE.match(line)
-        if not dm:
+    param_bytes = {i.name: float(i.out_bytes) for i in callee.instructions
+                   if i.opcode == "parameter"}
+    sliced: dict[str, float] = {}
+    for instr in callee.instructions:
+        if not instr.operands:
             continue
-        rest = dm.group(2)
-        if "dynamic-update-slice(" in rest:
+        if instr.opcode == "dynamic-update-slice":
             # the buffer operand of a DUS aliases in place: no read traffic
-            ops = _OPERANDS_RE.findall(
-                rest[rest.index("dynamic-update-slice("):])
-            src = root_param(ops[0]) if ops else None
+            src = callee.origin_param(instr.operands[0].ref)
             if src is not None:
-                sliced_params[src] = 0.0
-        elif "dynamic-slice(" in rest:
-            ops = _OPERANDS_RE.findall(rest[rest.index("dynamic-slice("):])
-            src = root_param(ops[0]) if ops else None
+                sliced[src] = 0.0
+        elif instr.opcode in ("dynamic-slice", "slice"):
+            src = callee.origin_param(instr.operands[0].ref)
             if src is not None:
-                sliced_params[src] = min(
-                    sliced_params.get(src, float("inf")),
-                    float(_shape_info(rest)[1]))
-    root_is_dus = "dynamic-update-slice(" in target
+                sliced[src] = min(sliced.get(src, float("inf")),
+                                  float(instr.out_bytes))
     in_traffic = 0.0
     for name, b in param_bytes.items():
         if root_is_dus:
             # scatter-update fusion: real reads are the slices it touches;
             # full-size untouched params are aliased carry buffers (and
             # XLA:CPU's bf16<->f32 legalization doubles of them).
-            in_traffic += sliced_params.get(name, 0.0)
+            in_traffic += sliced.get(name, 0.0)
         else:
-            in_traffic += sliced_params.get(name, b)
+            in_traffic += sliced.get(name, b)
     if root_is_dus:
         in_traffic += out_traffic          # the update values themselves
     return in_traffic, out_traffic
 
 
-def _analyze_comp(comp: _Comp, comps: dict | None = None):
+def _comp_cost(comp: hp.Computation, mod: hp.Module, *,
+               in_fusion: bool = False):
+    """(local Cost, [(callee_name, multiplier)]) for one computation.
+
+    ``in_fusion`` marks a fusion callee: its instructions run on-chip, so
+    it contributes FLOPs through the ``calls=`` edge while every byte
+    charge is suppressed — bytes are charged once, at the fusion
+    boundary, by the caller's slice-aware traffic rule."""
     cost = Cost()
     calls = []
-    for line in comp.lines:
-        dm = _DEF_RE.match(line)
-        if not dm:
-            continue
-        rest = dm.group(2)
-        om = _OPCODE_RE.match(rest)
-        if not om:
-            continue
-        type_str, opcode = om.group(1), om.group(2)
-        out_elems, out_bytes = _shape_info(type_str)
-        opc = opcode.lower()
+    for instr in comp.instructions:
+        opc = instr.opcode
+        out_elems, out_bytes = instr.out_elems, instr.out_bytes
+        flashable = "flashable" in instr.raw
+
         base = opc.replace("-start", "").replace("-done", "")
         if base in _COLL_KINDS:
             if opc.endswith("-done"):
                 continue
-            byts = out_bytes
+            byts = float(out_bytes)
             if base in ("reduce-scatter", "all-to-all"):
-                ops = _OPERANDS_RE.findall(rest[len(om.group(0)):])
-                in_bytes = sum(_shape_info(comp.symbols.get(o, ""))[1]
-                               for o in ops[:1])
-                byts = max(byts, in_bytes)
+                in_bytes = hp._leaf_bytes(comp.operand_shapes(instr, 0))
+                byts = max(byts, float(in_bytes))
             cost.coll[base] += byts
             cost.hbm_bytes += out_bytes
             continue
         if opc == "while":
-            trip = 1
-            tm = _TRIP_RE.search(line)
-            if tm:
-                trip = int(tm.group(1))
-            body = _CALLEE_RE.search(line)
-            cond = _COND_RE.search(line)
-            if body:
-                calls.append((body.group(1), trip))
-            if cond:
-                calls.append((cond.group(1), trip))
+            trip = instr.trip_count or 1
+            if instr.body:
+                calls.append((instr.body, trip))
+            if instr.condition:
+                calls.append((instr.condition, trip))
             continue
-        if opc in ("call", "fusion", "custom-call", "reduce", "sort", "map",
-                   "reduce-window", "scatter", "select-and-scatter",
-                   "conditional", "async-start"):
-            for cm_ in re.finditer(r"(?:to_apply|calls|body)=%?([\w.\-]+)", line):
-                calls.append((cm_.group(1), 1))
-            for cm_ in re.finditer(r"branch_computations=\{([^}]*)\}", line):
-                for c in _OPERANDS_RE.findall(cm_.group(1)):
-                    calls.append((c, 1))
+        if opc in _CALL_LIKE:
+            for c in instr.callees:
+                calls.append((c, 1))
+            for c in instr.branches:
+                calls.append((c, 1))
             # HBM boundary: operands + outputs, slice-aware for fusions
             # (scan carries / KV-cache updates alias in place and read
             # one-layer slices of stacked buffers).
             byts = None
-            if opc == "fusion" and comps is not None:
-                cal = _CALLEE_RE.search(line)
-                callee = comps.get(cal.group(1)) if cal else None
+            if opc == "fusion":
+                callee = mod.get(instr.callees[0]) if instr.callees else None
                 if callee is not None:
                     tr = _fusion_traffic(callee, out_elems, out_bytes)
                     if tr is not None:
                         byts = tr[0] + tr[1]
             if byts is None:
-                ops = _OPERANDS_RE.findall(rest[len(om.group(0)):])
-                in_bytes = sum(_shape_info(comp.symbols.get(o, ""))[1]
-                               for o in ops)
-                byts = out_bytes + in_bytes
+                byts = out_bytes + _operand_bytes(comp, instr)
             cost.hbm_bytes += byts
-            if "flashable" in line:
+            if flashable:
                 cost.flash_bytes += byts
             if opc == "reduce":
                 cost.ew_flops += out_elems  # rough
             continue
         if opc in ("dot", "dot-general"):
-            cost.dot_flops += _dot_flops(rest, out_elems, comp.symbols)
-            ops = _OPERANDS_RE.findall(rest[len(om.group(0)):])
-            in_bytes = sum(_shape_info(comp.symbols.get(o, ""))[1]
-                           for o in ops)
-            cost.hbm_bytes += out_bytes + in_bytes
-            if "flashable" in line:
-                cost.flash_bytes += out_bytes + in_bytes
+            cost.dot_flops += _dot_flops(comp, instr)
+            byts = out_bytes + _operand_bytes(comp, instr)
+            cost.hbm_bytes += byts
+            if flashable:
+                cost.flash_bytes += byts
             continue
         if opc == "convolution":
             # flops ~ 2 * out_elems * (in_channels * kernel_spatial)
@@ -329,53 +245,78 @@ def _analyze_comp(comp: _Comp, comps: dict | None = None):
             # elementwise at computation top level = one fused kernel anyway;
             # only count boundary bytes for large ops to avoid double count
             continue
-        if opc in ("copy", "transpose", "reshape", "broadcast", "concatenate",
-                   "slice", "dynamic-slice", "dynamic-update-slice", "gather",
-                   "pad", "iota", "convert", "bitcast", "bitcast-convert",
-                   "reverse"):
-            # copy/convert are CPU-lowering artifacts TPU fuses away; the
-            # rest genuinely move data through HBM.
-            if opc == "dynamic-update-slice":
-                # in-place: traffic = the update slice (2nd operand), r+w
-                ops = _OPERANDS_RE.findall(rest[len(om.group(0)):])
-                upd = (_shape_info(comp.symbols.get(ops[1], ""))[1]
-                       if len(ops) > 1 else out_bytes)
-                cost.hbm_bytes += 2.0 * upd
-                if "flashable" in line:
-                    cost.flash_bytes += 2.0 * upd
-            elif opc in ("transpose", "concatenate", "gather", "pad"):
-                cost.hbm_bytes += 2.0 * out_bytes
-                if "flashable" in line:
-                    cost.flash_bytes += 2.0 * out_bytes
+        if opc == "dynamic-update-slice":
+            # in-place: traffic = the update slice (2nd operand), r+w
+            upd = (hp._leaf_bytes(comp.operand_shapes(instr, 1))
+                   if len(instr.operands) > 1 else out_bytes)
+            cost.hbm_bytes += 2.0 * upd
+            if flashable:
+                cost.flash_bytes += 2.0 * upd
             continue
-    comp.local = cost
-    comp.calls = calls
+        if opc in _MOVE_RW:
+            cost.hbm_bytes += 2.0 * out_bytes
+            if flashable:
+                cost.flash_bytes += 2.0 * out_bytes
+            continue
+        # _MOVE_FREE, parameter, constant, tuple, get-tuple-element,
+        # compare-free bookkeeping: no charge
+    if in_fusion:
+        cost.hbm_bytes = 0.0
+        cost.flash_bytes = 0.0
+    return cost, calls
 
 
-def analyze(hlo_text: str) -> Cost:
-    comps = _split_computations(hlo_text)
-    for c in comps.values():
-        _analyze_comp(c, comps)
-    entry = None
-    for c in comps.values():
-        if getattr(c, "is_entry", False):
-            entry = c
-    if entry is None:  # fall back: last computation
-        entry = list(comps.values())[-1]
+def _local_costs(mod: hp.Module) -> dict:
+    """name -> (local Cost, call edges), with fusion callees marked so
+    their bytes are suppressed (charged at the fusion boundary only)."""
+    fusion_callees = {c for comp in mod.computations.values()
+                      for i in comp.instructions if i.opcode == "fusion"
+                      for c in i.callees}
+    return {name: _comp_cost(c, mod, in_fusion=name in fusion_callees)
+            for name, c in mod.computations.items()}
 
+
+def _rollup(local: dict, entry_name: str, count_trips: bool) -> Cost:
     memo: dict[str, Cost] = {}
 
     def total(name: str) -> Cost:
         if name in memo:
             return memo[name]
-        comp = comps.get(name)
         out = Cost()
-        if comp is None:
+        if name not in local:
             return out
         memo[name] = out           # break cycles defensively
-        out.add(comp.local)
-        for callee, mult in comp.calls:
-            out.add(total(callee), mult)
+        cost, calls = local[name]
+        out.add(cost)
+        for callee, mult in calls:
+            out.add(total(callee), mult if count_trips else 1.0)
         return out
 
-    return total(entry.name)
+    return total(entry_name)
+
+
+def analyze_module(mod: hp.Module, *, count_trips: bool = True) -> Cost:
+    """Roll per-computation costs up through the call graph from entry."""
+    entry = mod.entry
+    if entry is None:
+        return Cost()
+    return _rollup(_local_costs(mod), entry.name, count_trips)
+
+
+def analyze(hlo_text: str, *, count_trips: bool = True) -> Cost:
+    """Parse + cost the module. ``count_trips=False`` reproduces XLA's
+    count-a-while-body-once convention (for calibration)."""
+    return analyze_module(hp.parse_module(hlo_text), count_trips=count_trips)
+
+
+def analyze_pair(hlo_text: str) -> tuple:
+    """(trip-multiplied, count-body-once) costs from ONE parse + cost
+    pass — what from_compiled and the calibration harness use; parsing a
+    multi-MB module and walking every computation happens once."""
+    mod = hp.parse_module(hlo_text)
+    entry = mod.entry
+    if entry is None:
+        return Cost(), Cost()
+    local = _local_costs(mod)
+    return (_rollup(local, entry.name, True),
+            _rollup(local, entry.name, False))

@@ -1,0 +1,318 @@
+"""Structured parser for post-optimization HLO text.
+
+Phase 1 of the cost-model subsystem (:mod:`repro.roofline.hlo_cost` is
+phase 2). Turns ``compiled.as_text()`` into typed records — one
+:class:`Instruction` per line with its opcode, output shape leaves,
+operand references (with the inline operand types jax >= 0.4.3x
+prints), and the attributes the cost pass needs (``known_trip_count``,
+contracting dims, ``dynamic_slice_sizes``, callee computations) — so
+the cost rules operate on IR instead of ad-hoc string scans.
+
+The parser is deliberately tolerant of both operand styles:
+
+  * modern:  ``dot(f32[8,16]{1,0} %lhs, f32[16,16]{1,0} %rhs)``
+  * legacy:  ``dot(%lhs, %rhs)``  (shapes resolved via def-use)
+
+Unknown opcodes/attributes parse fine and simply carry no extra
+structure; the cost pass decides what to charge.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_REF_RE = re.compile(r"%([\w.\-]+)")
+_OPCODE_RE = re.compile(r"\s*([\w\-]+)\(")
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->.*\{$")
+
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_RHS_C_RE = re.compile(r"rhs_contracting_dims=\{([\d,]*)\}")
+_LHS_B_RE = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+_DSS_RE = re.compile(r"dynamic_slice_sizes=\{([\d,]*)\}")
+_BODY_RE = re.compile(r"\bbody=%?([\w.\-]+)")
+_COND_RE = re.compile(r"\bcondition=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"\b(?:calls|to_apply)=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+# ops that forward their operand's buffer (or a re-typed view of it);
+# def-use chains are resolved through these
+ALIAS_OPS = frozenset({"bitcast", "bitcast-convert", "convert", "copy",
+                       "reshape", "get-tuple-element"})
+
+
+@dataclass(frozen=True)
+class TensorShape:
+    dtype: str
+    dims: tuple
+
+    @property
+    def elems(self) -> int:
+        n = 1
+        for d in self.dims:
+            n *= d
+        return n
+
+    @property
+    def bytes(self) -> int:
+        return self.elems * DTYPE_BYTES.get(self.dtype, 0)
+
+
+def parse_shapes(text: str) -> tuple:
+    """Every tensor leaf in ``text`` (a tuple type yields all leaves)."""
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in DTYPE_BYTES:
+            continue
+        out.append(TensorShape(
+            dt, tuple(int(d) for d in dims.split(",") if d)))
+    return tuple(out)
+
+
+def _leaf_elems(shapes) -> int:
+    return sum(s.elems for s in shapes)
+
+
+def _leaf_bytes(shapes) -> int:
+    return sum(s.bytes for s in shapes)
+
+
+def _match_paren(s: str, i: int, open_ch: str = "(", close_ch: str = ")"):
+    """Index of the close matching ``s[i]`` (== open_ch), or -1."""
+    depth = 0
+    for j in range(i, len(s)):
+        c = s[j]
+        if c == open_ch:
+            depth += 1
+        elif c == close_ch:
+            depth -= 1
+            if depth == 0:
+                return j
+    return -1
+
+
+def _split_top(s: str, sep: str = ",") -> list:
+    """Split on ``sep`` at bracket depth 0 (over (), {}, [])."""
+    parts, depth, start = [], 0, 0
+    for j, c in enumerate(s):
+        if c in "({[":
+            depth += 1
+        elif c in ")}]":
+            depth -= 1
+        elif c == sep and depth == 0:
+            parts.append(s[start:j])
+            start = j + 1
+    parts.append(s[start:])
+    return [p.strip() for p in parts if p.strip()]
+
+
+@dataclass(frozen=True)
+class Operand:
+    ref: str | None          # %name it refers to (None for literals)
+    shapes: tuple            # inline-type leaves ((), when legacy style)
+
+    @property
+    def bytes(self) -> int:
+        return _leaf_bytes(self.shapes)
+
+
+def _int_tuple(m) -> tuple:
+    if not m:
+        return ()
+    return tuple(int(d) for d in m.group(1).split(",") if d)
+
+
+@dataclass
+class Instruction:
+    name: str
+    opcode: str
+    is_root: bool
+    shapes: tuple                    # output leaves (tuple flattened)
+    operands: tuple                  # Operand records, in order
+    raw: str                         # full source line (metadata included)
+    trip_count: int | None = None
+    lhs_contracting: tuple = ()
+    rhs_contracting: tuple = ()
+    lhs_batch: tuple = ()
+    dynamic_slice_sizes: tuple = ()
+    body: str | None = None          # while body computation
+    condition: str | None = None     # while condition computation
+    callees: tuple = ()              # calls= / to_apply= targets
+    branches: tuple = ()             # conditional branch computations
+
+    @property
+    def out_elems(self) -> int:
+        return _leaf_elems(self.shapes)
+
+    @property
+    def out_bytes(self) -> int:
+        return _leaf_bytes(self.shapes)
+
+
+def parse_instruction(line: str) -> Instruction | None:
+    dm = _DEF_RE.match(line)
+    if not dm:
+        return None
+    is_root, name, rest = bool(dm.group(1)), dm.group(2), dm.group(3)
+    # output type: a parenthesized tuple or a single space-free token
+    if rest.startswith("("):
+        close = _match_paren(rest, 0)
+        if close < 0:
+            return None
+        type_str, after = rest[:close + 1], rest[close + 1:]
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_str, after = rest[:sp], rest[sp:]
+    om = _OPCODE_RE.match(after)
+    if not om:
+        return None
+    opcode = om.group(1)
+    op_open = after.index("(", om.start(1))
+    op_close = _match_paren(after, op_open)
+    if op_close < 0:
+        return None
+    opnd_text = after[op_open + 1:op_close]
+    attr_text = after[op_close + 1:]
+
+    operands = []
+    for chunk in _split_top(opnd_text):
+        refs = _REF_RE.findall(chunk)
+        operands.append(Operand(ref=refs[-1] if refs else None,
+                                shapes=parse_shapes(chunk)))
+
+    tm = _TRIP_RE.search(attr_text)
+    bm = _BODY_RE.search(attr_text)
+    cm = _COND_RE.search(attr_text)
+    br = _BRANCH_RE.search(attr_text)
+    return Instruction(
+        name=name, opcode=opcode, is_root=is_root,
+        shapes=parse_shapes(type_str), operands=tuple(operands),
+        raw=line,
+        trip_count=int(tm.group(1)) if tm else None,
+        lhs_contracting=_int_tuple(_LHS_C_RE.search(attr_text)),
+        rhs_contracting=_int_tuple(_RHS_C_RE.search(attr_text)),
+        lhs_batch=_int_tuple(_LHS_B_RE.search(attr_text)),
+        dynamic_slice_sizes=_int_tuple(_DSS_RE.search(attr_text)),
+        body=bm.group(1) if bm else None,
+        condition=cm.group(1) if cm else None,
+        callees=tuple(_CALLS_RE.findall(attr_text)),
+        branches=tuple(_REF_RE.findall(br.group(1))) if br else (),
+    )
+
+
+@dataclass
+class Computation:
+    name: str
+    is_entry: bool = False
+    params: dict = field(default_factory=dict)      # header name -> leaves
+    instructions: list = field(default_factory=list)
+    by_name: dict = field(default_factory=dict)
+
+    @property
+    def root(self) -> Instruction | None:
+        for i in self.instructions:
+            if i.is_root:
+                return i
+        return self.instructions[-1] if self.instructions else None
+
+    def add(self, instr: Instruction):
+        self.instructions.append(instr)
+        self.by_name[instr.name] = instr
+
+    def shapes_of(self, ref: str | None) -> tuple:
+        """Output leaves of the value ``ref`` names (def or header param)."""
+        if ref is None:
+            return ()
+        instr = self.by_name.get(ref)
+        if instr is not None:
+            return instr.shapes
+        return self.params.get(ref, ())
+
+    def operand_shapes(self, instr: Instruction, idx: int) -> tuple:
+        """Inline operand type when present, else def-use resolution."""
+        if idx >= len(instr.operands):
+            return ()
+        op = instr.operands[idx]
+        if op.shapes:
+            return op.shapes
+        return self.shapes_of(op.ref)
+
+    def resolve(self, ref: str | None,
+                through: frozenset = ALIAS_OPS) -> Instruction | None:
+        """The defining instruction, chasing alias ops (convert/bitcast/
+        copy/reshape/GTE chains) back to the producing def."""
+        seen = 0
+        while ref is not None and seen < 32:
+            instr = self.by_name.get(ref)
+            if instr is None:
+                return None
+            if instr.opcode in through and instr.operands \
+                    and instr.operands[0].ref is not None:
+                ref = instr.operands[0].ref
+                seen += 1
+                continue
+            return instr
+        return None
+
+    def origin_param(self, ref: str | None) -> str | None:
+        """Name of the ``parameter`` the value aliases, if it does."""
+        instr = self.resolve(ref)
+        if instr is not None and instr.opcode == "parameter":
+            return instr.name
+        return None
+
+
+@dataclass
+class Module:
+    computations: dict = field(default_factory=dict)
+
+    @property
+    def entry(self) -> Computation | None:
+        for c in self.computations.values():
+            if c.is_entry:
+                return c
+        if self.computations:
+            return list(self.computations.values())[-1]
+        return None
+
+    def get(self, name: str | None) -> Computation | None:
+        if name is None:
+            return None
+        return self.computations.get(name)
+
+
+def parse_module(text: str) -> Module:
+    mod = Module()
+    cur: Computation | None = None
+    for raw in text.splitlines():
+        s = raw.strip()
+        if cur is None:
+            hm = _HEADER_RE.match(s)
+            if hm:
+                cur = Computation(name=hm.group(2),
+                                  is_entry=bool(hm.group(1)))
+                for chunk in _split_top(hm.group(3)):
+                    if ":" not in chunk:
+                        continue
+                    pname, ptype = chunk.split(":", 1)
+                    cur.params[pname.strip()] = parse_shapes(ptype)
+                mod.computations[cur.name] = cur
+            continue
+        if s == "}":
+            cur = None
+            continue
+        instr = parse_instruction(s)
+        if instr is not None:
+            cur.add(instr)
+    return mod

@@ -1,0 +1,60 @@
+"""Calibration: analyze() vs XLA's cost_analysis() on live lowerings.
+
+The comparable convention is ``count_trips=False`` (XLA counts a while
+body once); the acceptance bar is dot-FLOP/FLOP agreement within 5% on
+the dot-dominated fixtures.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    from hypothesis_fallback import given, settings, st
+
+from repro.roofline import calibrate, hlo_cost
+
+
+@pytest.fixture(scope="module")
+def rows():
+    return calibrate.calibrate()
+
+
+def test_battery_flops_within_5pct(rows):
+    gated = [r for r in rows if r.gate]
+    assert len(gated) >= 3
+    for r in gated:
+        assert r.ok(0.05), (r.name, r.deltas)
+
+
+def test_battery_report_is_well_formed(rows):
+    lines = calibrate.report(rows)
+    assert len(lines) > len(rows)               # header + trip annotations
+    assert all(isinstance(l, str) for l in lines)
+    assert "matmul" in "\n".join(lines)
+
+
+def test_trip_multiplied_terms_scale_by_trip_count(rows):
+    by_name = {r.name: r for r in rows}
+    scan = by_name["scan"]
+    assert scan.ours["dot_flops"] == pytest.approx(
+        7 * scan.ours_flat["dot_flops"])
+    nested = by_name["nested_scan"]
+    assert nested.ours["dot_flops"] == pytest.approx(
+        15 * nested.ours_flat["dot_flops"])
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(8, 48), st.integers(8, 48), st.integers(8, 48))
+def test_live_matmul_dot_flops_match_xla(m, k, n):
+    """Property: on a live-lowered matmul, analyze() dot FLOPs equal the
+    analytic 2·M·K·N and agree with cost_analysis() within 5%."""
+    f = jax.jit(lambda a, b: a @ b)
+    c = f.lower(jax.ShapeDtypeStruct((m, k), jnp.float32),
+                jax.ShapeDtypeStruct((k, n), jnp.float32)).compile()
+    cost = hlo_cost.analyze(c.as_text())
+    assert cost.dot_flops == 2 * m * k * n
+    xla = calibrate.xla_cost_terms(c)["flops"]
+    if xla:                                      # some backends omit it
+        assert cost.dot_flops == pytest.approx(xla, rel=0.05)
