@@ -7,7 +7,12 @@
 #   make calibrate   - cost model vs XLA cost_analysis() on the fixture
 #                      battery (gates dot-FLOP agreement at 5%)
 #   make docs-lint   - docs exist and the figure map covers every bench
-.PHONY: test bench-smoke calibrate docs-lint check
+#   make autotune    - refresh the committed Pallas tiling cache
+#                      (src/repro/kernels/tilings.json) from the
+#                      hot-path shape battery
+#   make autotune-check - assert the committed cache is in sync with
+#                      what the sweep produces (CI runs this)
+.PHONY: test bench-smoke calibrate docs-lint autotune autotune-check check
 
 PY := PYTHONPATH=src python
 
@@ -24,4 +29,10 @@ calibrate:
 docs-lint:
 	$(PY) scripts/docs_lint.py
 
-check: test bench-smoke docs-lint
+autotune:
+	$(PY) scripts/autotune.py
+
+autotune-check:
+	$(PY) scripts/autotune.py --check
+
+check: test bench-smoke docs-lint autotune-check

@@ -1,0 +1,68 @@
+"""Fused vs unfused identify path: latency, throughput, transfer bytes.
+
+The paper's thesis at its most literal: the unfused identify loop pays
+the host<->device boundary four times per face batch (crop upload for
+the thumbnail resize, thumbnail download, thumbnail re-upload for the
+embed, embedding download) plus a host-side classify; the fused path
+(`StreamingPipeline(fast_path=True)`, the default) runs
+crop -> resize-fold -> embed -> gallery argmax as ONE device program —
+uint8 crops up, (name-index, score) down. This sweep runs the live
+pipeline both ways and reports, per face: identify time, transfer
+bytes at the face boundaries (measured from the `transfer` events the
+pipeline logs), and the fused/unfused byte-reduction factor.
+"""
+from __future__ import annotations
+
+from benchmarks.common import row, timed
+from repro.core.pipeline import StreamingPipeline
+
+BATCH_SIZES = (1, 4, 8)
+# boundaries attributable to per-face identify work (frame upload +
+# heatmap download are common to both paths and excluded)
+FACE_BOUNDARIES = ("crop_resize", "embed", "identify_fused")
+
+
+def _face_transfer_bytes(res) -> int:
+    return sum(e.payload_bytes for e in res.log.events
+               if e.meta.get("kind") == "transfer"
+               and e.meta.get("boundary") in FACE_BOUNDARIES)
+
+
+def run(n_frames: int = 30) -> list[str]:
+    # warm shared jit caches so the timed points measure steady state
+    for fast in (False, True):
+        StreamingPipeline(n_frames=max(BATCH_SIZES), seed=0,
+                          batch_size=max(BATCH_SIZES),
+                          batch_timeout_ms=100.0, fast_path=fast).run()
+    out = []
+    per_face_bytes: dict[tuple[bool, int], float] = {}
+    for fast in (False, True):
+        for bs in BATCH_SIZES:
+            pipe = StreamingPipeline(n_frames=n_frames, seed=0,
+                                     batch_size=bs, batch_timeout_ms=100.0,
+                                     fast_path=fast)
+            res, us = timed(pipe.run)
+            faces = max(1, res.detected)
+            tax = res.ai_tax()
+            per = tax["per_stage"]
+            fb = _face_transfer_bytes(res) / faces
+            per_face_bytes[(fast, bs)] = fb
+            label = "fused" if fast else "unfused"
+            out.append(row(
+                f"fig_fused/{label}_bs{bs:02d}", us,
+                f"identify_us_per_face={per.get('identify', 0.0) * 1e6:.0f};"
+                f"xfer_bytes_per_face={fb:.0f};"
+                f"xfer_total_mb={tax['transfer_bytes']['total'] / 1e6:.2f};"
+                f"ai_frac={tax['ai_fraction']:.2f};"
+                f"throughput_rps={res.log.throughput():.0f};"
+                f"recall={res.recall:.2f}"))
+    for bs in BATCH_SIZES:
+        ratio = per_face_bytes[(False, bs)] / max(1.0,
+                                                  per_face_bytes[(True, bs)])
+        out.append(row(f"fig_fused/reduction_bs{bs:02d}", 0.0,
+                       f"xfer_reduction={ratio:.1f}x;target=>=4x"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -81,6 +81,32 @@ def run() -> list[str]:
     t, bound = _proj(flops, byts)
     out.append(row("kernel/resize_1080p", us,
                    f"tpu_roofline_us={t*1e6:.0f};bound={bound}"))
+
+    # matmul: the embedder's layer-1 contraction, default vs autotuned
+    # tiling — analytic TPU projection at each tiling, plus a CPU
+    # interpret-mode run as numerical sanity for the tuned blocks
+    from repro.kernels import autotune, ref
+    M, K, N = 512, 3072, 256
+    default = {"blk_m": 128, "blk_n": 128, "blk_k": 512}
+    tuned = autotune.matmul_tiling(M, K, N, "float32")
+    for label, blocks in (("default", default), ("autotuned", tuned)):
+        proj = autotune.matmul_cost_us(M, K, N, "float32", **blocks)
+        out.append(row(
+            f"kernel/matmul_embed_{label}", 0.0,
+            f"tpu_proj_us={proj:.2f};"
+            f"blocks=m{blocks['blk_m']}n{blocks['blk_n']}k{blocks['blk_k']}"))
+    a = jax.random.normal(key, (M, K), jnp.float32) * 0.1
+    b = jax.random.normal(key, (K, N), jnp.float32) * 0.1
+    mm = jax.jit(lambda a, b: ops.matmul(a, b, impl="pallas_interpret",
+                                         **tuned))
+    mm(a, b).block_until_ready()     # warm: trace + interpret setup
+    got, us = timed(lambda: mm(a, b).block_until_ready(), repeat=2)
+    err = float(jnp.max(jnp.abs(got - ref.matmul(a, b))))
+    speedup = autotune.matmul_cost_us(M, K, N, "float32", **default) \
+        / autotune.matmul_cost_us(M, K, N, "float32", **tuned)
+    out.append(row("kernel/matmul_embed_tuned_sanity", us,
+                   f"interp_max_err={err:.1e};"
+                   f"tuned_vs_default_proj={speedup:.2f}x"))
     return out
 
 

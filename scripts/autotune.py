@@ -1,0 +1,61 @@
+"""Refresh or verify the committed Pallas tiling cache.
+
+``make autotune`` runs the analytic candidate sweep over the repo's
+hot-path shape battery and rewrites ``src/repro/kernels/tilings.json``;
+``make autotune-check`` (``--check``) re-runs the sweep in memory and
+exits non-zero if the committed file has drifted — so CI catches a
+kernel/candidate-space change that forgot to refresh the cache.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+
+from repro.kernels import autotune  # noqa: E402
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--check", action="store_true",
+                    help="verify the committed cache matches the sweep "
+                         "instead of rewriting it")
+    ap.add_argument("--out", default=str(autotune.SEED_PATH),
+                    help="cache file to write (default: committed seed)")
+    args = ap.parse_args()
+
+    entries = autotune.hot_path_battery()
+    text = json.dumps(entries, indent=1, sort_keys=True) + "\n"
+    out = pathlib.Path(args.out)
+
+    if args.check:
+        if not out.is_file():
+            print(f"autotune --check: {out} missing (run `make autotune`)",
+                  file=sys.stderr)
+            return 1
+        committed = json.loads(out.read_text())
+        stale = {k for k in entries
+                 if committed.get(k, {}).get("blocks") != entries[k]["blocks"]}
+        gone = set(committed) - set(entries)
+        if stale or gone:
+            for k in sorted(stale):
+                print(f"autotune --check: stale entry {k}: committed="
+                      f"{committed.get(k, {}).get('blocks')} "
+                      f"swept={entries[k]['blocks']}", file=sys.stderr)
+            for k in sorted(gone):
+                print(f"autotune --check: orphan entry {k} "
+                      "(not in the battery)", file=sys.stderr)
+            return 1
+        print(f"autotune --check: OK ({len(entries)} entries in sync)")
+        return 0
+
+    out.write_text(text)
+    print(f"autotune: wrote {len(entries)} entries to {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -41,6 +41,39 @@ class EventLog:
         self.events.append(ev)
         return ev
 
+    def log_transfer(self, request_id: int, direction: str, nbytes: int,
+                     boundary: str, t_start: float | None = None,
+                     t_end: float | None = None,
+                     stage: str = "transfer") -> Event:
+        """A host<->device boundary crossing (the paper's transfer tax).
+
+        ``direction`` is ``"h2d"`` or ``"d2h"``; ``boundary`` names the
+        crossing (e.g. ``"crop_resize"``, ``"identify_fused"``) so
+        per-boundary byte accounting survives aggregation. Transfers
+        that happen inside a jitted program aren't separately timeable
+        — callers may log them as zero-duration point events; the bytes
+        are the quantity of record (`transfer_bytes()`), while timed
+        crossings (e.g. TaxedStep's explicit device_put/get) carry real
+        spans and show up in the time split too.
+        """
+        t0 = time.perf_counter() if t_start is None else t_start
+        return self.log(request_id, stage, t0, t0 if t_end is None else t_end,
+                        payload_bytes=nbytes, kind="transfer",
+                        direction=direction, boundary=boundary)
+
+    def transfer_bytes(self, boundary: str | None = None) -> dict[str, int]:
+        """Total transferred bytes by direction (optionally one boundary)."""
+        out = {"h2d": 0, "d2h": 0}
+        for ev in self.events:
+            if ev.meta.get("kind") != "transfer":
+                continue
+            if boundary is not None and ev.meta.get("boundary") != boundary:
+                continue
+            out[ev.meta.get("direction", "h2d")] = \
+                out.get(ev.meta.get("direction", "h2d"), 0) + ev.payload_bytes
+        out["total"] = sum(out.values())
+        return out
+
     # ---- aggregations -----------------------------------------------------
 
     def stage_latencies(self) -> dict[str, list[float]]:
@@ -81,12 +114,24 @@ class EventLog:
         return sum(e2e) / len(e2e) if e2e else 0.0
 
     def ai_tax(self, ai_stages: set[str]) -> dict[str, float]:
-        """Fraction of total time in AI vs supporting stages (the AI tax)."""
+        """Fraction of total time in AI vs supporting stages (the AI tax).
+
+        The tax side is further split: stages whose events carry
+        ``kind="transfer"`` meta (host<->device crossings) are reported
+        as ``transfer_fraction`` (a subset of ``tax_fraction``), and
+        the boundary bytes they moved as ``transfer_bytes`` — so the
+        breakdown reads AI vs pre/post-processing vs data movement.
+        """
         by_stage = self.breakdown()
+        transfer_set = {ev.stage for ev in self.events
+                        if ev.meta.get("kind") == "transfer"}
         ai = sum(v for s, v in by_stage.items() if s in ai_stages)
+        transfer = sum(v for s, v in by_stage.items() if s in transfer_set)
         total = sum(by_stage.values())
         return {"ai_fraction": ai / total if total else 0.0,
                 "tax_fraction": 1.0 - (ai / total if total else 0.0),
+                "transfer_fraction": transfer / total if total else 0.0,
+                "transfer_bytes": self.transfer_bytes(),
                 "total_latency": total,
                 "per_stage": by_stage}
 

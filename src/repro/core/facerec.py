@@ -21,6 +21,8 @@ from repro.kernels import ops
 
 THUMB = 32          # thumbnail side (paper: 160x160)
 EMBED_DIM = 128     # paper: 128-byte feature vector
+CROP_SIZE = 48      # detection crop window fed to the THUMB resize
+DETECT_POOL = 8     # heatmap downsampling factor (full-res / pool)
 
 
 def _pad_pow2(n: int) -> int:
@@ -43,13 +45,15 @@ def _pad_rows_pow2(arr: np.ndarray) -> np.ndarray:
 
 
 @functools.partial(jax.jit, static_argnums=(1,))
-def detect_heatmap(frame: jax.Array, pool: int = 8) -> jax.Array:
+def detect_heatmap(frame: jax.Array,
+                   pool: int = DETECT_POOL) -> jax.Array:
     """Brightness heatmap at 1/pool resolution. frame: (H, W, 3) uint8."""
     return detect_heatmap_batch(frame[None], pool)[0]
 
 
 @functools.partial(jax.jit, static_argnums=(1,))
-def detect_heatmap_batch(frames: jax.Array, pool: int = 8) -> jax.Array:
+def detect_heatmap_batch(frames: jax.Array,
+                         pool: int = DETECT_POOL) -> jax.Array:
     """Heatmaps for a stacked batch. frames: (B, H, W, 3) uint8."""
     x = frames.astype(jnp.float32).mean(-1)
     B, H, W = x.shape
@@ -72,13 +76,14 @@ def _extract_peaks(hm: np.ndarray, pool: int, thresh: float,
     return out
 
 
-def detect_faces(frame: np.ndarray, pool: int = 8, thresh: float = 60.0,
+def detect_faces(frame: np.ndarray, pool: int = DETECT_POOL,
+                 thresh: float = 60.0,
                  max_faces: int = 5) -> list[tuple[int, int]]:
     """Peak extraction on the heatmap -> face centers (full-res coords)."""
     return detect_faces_batch(frame[None], pool, thresh, max_faces)[0]
 
 
-def detect_faces_batch(frames: np.ndarray, pool: int = 8,
+def detect_faces_batch(frames: np.ndarray, pool: int = DETECT_POOL,
                        thresh: float = 60.0,
                        max_faces: int = 5) -> list[list[tuple[int, int]]]:
     """Face centers per frame; one heatmap call for the whole stack.
@@ -95,19 +100,20 @@ def detect_faces_batch(frames: np.ndarray, pool: int = 8,
 
 
 def crop_thumbnail(frame: np.ndarray, y: int, x: int,
-                   size: int = 48) -> np.ndarray:
+                   size: int = CROP_SIZE) -> np.ndarray:
     return crop_thumbnails_batch([frame], [[(y, x)]], size)[0][0]
 
 
-def crop_thumbnails_batch(frames: list[np.ndarray],
-                          centers_per_frame: list[list[tuple[int, int]]],
-                          size: int = 48) -> list[list[np.ndarray]]:
-    """Crop every detection in a batch of frames; one resize call total.
+def crop_stacks(frames: list[np.ndarray],
+                centers_per_frame: list[list[tuple[int, int]]],
+                size: int = CROP_SIZE) -> tuple[np.ndarray | None, list[int]]:
+    """Host-side crop extraction shared by the fused and unfused paths.
 
-    The paper's resize tax: each crop is normalized to the model's THUMB
-    input size. Batching turns B_faces separate resizes into a single
-    (B_faces, size, size, 3) -> (B_faces, THUMB, THUMB, 3) kernel call.
-    Returns thumbnails grouped per frame (same nesting as the centers).
+    Pure numpy slicing (no resize, no device work): every detection
+    becomes a (size, size, C) window clipped to the frame, zero-padded
+    when the frame is smaller than the window. Returns the stacked
+    crops (N_faces, size, size, C) — or None when there are none — plus
+    the per-frame face counts for regrouping.
     """
     half = size // 2
     crops, counts = [], []
@@ -126,15 +132,35 @@ def crop_thumbnails_batch(frames: list[np.ndarray],
                 crop = padded
             crops.append(crop)
     if not crops:
-        return [[] for _ in frames]
-    stack = _pad_rows_pow2(np.stack(crops).astype(np.float32))
-    thumbs = np.asarray(ops.resize_bilinear(
-        jnp.asarray(stack), THUMB, THUMB))[:len(crops)]
+        return None, counts
+    return np.stack(crops), counts
+
+
+def _regroup(flat: list, counts: list[int]) -> list[list]:
     out, i = [], 0
     for n in counts:
-        out.append(list(thumbs[i:i + n]))
+        out.append(list(flat[i:i + n]))
         i += n
     return out
+
+
+def crop_thumbnails_batch(frames: list[np.ndarray],
+                          centers_per_frame: list[list[tuple[int, int]]],
+                          size: int = CROP_SIZE) -> list[list[np.ndarray]]:
+    """Crop every detection in a batch of frames; one resize call total.
+
+    The paper's resize tax: each crop is normalized to the model's THUMB
+    input size. Batching turns B_faces separate resizes into a single
+    (B_faces, size, size, 3) -> (B_faces, THUMB, THUMB, 3) kernel call.
+    Returns thumbnails grouped per frame (same nesting as the centers).
+    """
+    crops, counts = crop_stacks(frames, centers_per_frame, size)
+    if crops is None:
+        return [[] for _ in frames]
+    stack = _pad_rows_pow2(crops.astype(np.float32))
+    thumbs = np.asarray(ops.resize_bilinear(
+        jnp.asarray(stack), THUMB, THUMB))[:len(crops)]
+    return _regroup(thumbs, counts)
 
 
 @functools.partial(jax.jit, static_argnums=(3,))
@@ -199,3 +225,101 @@ class Classifier:
         idx = np.argmax(sims, axis=1)
         return [(self.names[i], float(sims[b, i]))
                 for b, i in enumerate(idx)]
+
+
+# --------------------------------------------------------------------------
+# Device-resident fast path: crop-stack -> embed -> gallery, one program
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=(4,))
+def _fused_identify_jit(crops, w1f, w2, gal_t, impl):
+    """One device program for the whole identify hot loop.
+
+    The bilinear resize is linear, so it is pre-composed into ``w1f``
+    (see :class:`FusedIdentifier`): the raw crop pixels hit a single
+    (crop_px, 256) matmul whose fused tanh epilogue keeps the hidden
+    layer in VMEM, then the embedding matmul, normalization, and the
+    gallery similarity + argmax all run on-device. Only the crop stack
+    crosses host->device and only (name-index, score) crosses back.
+    """
+    x = crops.reshape(crops.shape[0], -1).astype(jnp.float32)
+    h = ops.matmul(x, w1f, epilogue="tanh", impl=impl)
+    e = ops.matmul(h, w2, impl=impl)
+    e = e / jnp.maximum(jnp.linalg.norm(e, axis=-1, keepdims=True), 1e-12)
+    sims = e @ gal_t
+    return jnp.argmax(sims, axis=1).astype(jnp.int32), jnp.max(sims, axis=1)
+
+
+class FusedIdentifier:
+    """Crop -> resize -> embed -> classify as ONE jitted device program.
+
+    The unfused hot loop crosses the host<->device boundary four times
+    per face batch (crop upload for the thumbnail resize, thumbnail
+    download, thumbnail upload for the embed, embedding download) and
+    classifies on the host. This path exploits that bilinear resize is
+    *linear*: ``thumb = Ry @ crop @ Rx^T`` per channel, so the
+    interpolation operator, the ``/255`` normalization, and the
+    flatten are pre-composed with the embedder's first layer ONCE at
+    init —
+
+        w1_fold[(sy, sx, c), j] = sum_{ty,tx} Ry[ty,sy] Rx[tx,sx]
+                                  * w1[(ty,tx,c), j] / 255
+
+    — turning crop-pixels -> hidden into a single (crop_px, 256)
+    matmul. Per call, only the uint8 crop stack goes up and a
+    (name-index, score) pair per face comes down.
+    """
+
+    def __init__(self, embedder: Embedder, classifier: Classifier,
+                 crop_size: int = CROP_SIZE):
+        from repro.kernels.resize import _interp_matrix
+        self.size = crop_size
+        self.names = classifier.names
+        ry = _interp_matrix(THUMB, crop_size).astype(np.float64)
+        rx = _interp_matrix(THUMB, crop_size).astype(np.float64)
+        w1r = np.asarray(embedder.w1, np.float64).reshape(THUMB, THUMB, 3, -1)
+        # optimize=True: contract pairwise (Ry first, then Rx) instead of
+        # a naive 6-index loop — ~100x faster, identical result
+        w1f = np.einsum("ts,uv,tucj->svcj", ry, rx, w1r,
+                        optimize=True) / 255.0
+        self.w1f = jnp.asarray(
+            w1f.reshape(crop_size * crop_size * 3, -1).astype(np.float32))
+        self.w2 = embedder.w2
+        self.gal_t = jnp.asarray(classifier.mat.T)    # (EMBED_DIM, G)
+
+    def identify_crops(self, crops: np.ndarray) -> list[tuple[str, float]]:
+        """crops: (B, size, size, 3) any real dtype -> [(name, score)].
+
+        B is padded to its power-of-two bucket (same bucketing as the
+        unfused stages) so ragged timeout-flushed batches reuse traces;
+        B=1 degenerates to the same code path.
+        """
+        B = crops.shape[0]
+        idx, score = _fused_identify_jit(
+            jnp.asarray(_pad_rows_pow2(np.ascontiguousarray(crops))),
+            self.w1f, self.w2, self.gal_t, ops.get_default_impl())
+        idx, score = np.asarray(idx)[:B], np.asarray(score)[:B]
+        return [(self.names[i], float(s)) for i, s in zip(idx, score)]
+
+    def identify_batch(self, frames: list[np.ndarray],
+                       centers_per_frame: list[list[tuple[int, int]]],
+                       ) -> list[list[tuple[str, float]]]:
+        """Fused analogue of crop_thumbnails_batch + Embedder.embed_batch
+        + Classifier.identify_batch, grouped per frame like the centers."""
+        crops, counts = crop_stacks(frames, centers_per_frame, self.size)
+        if crops is None:
+            return [[] for _ in frames]
+        return _regroup(self.identify_crops(crops), counts)
+
+
+def identify_fused_batch(frames: list[np.ndarray],
+                         centers_per_frame: list[list[tuple[int, int]]],
+                         embedder: Embedder, classifier: Classifier,
+                         crop_size: int = CROP_SIZE,
+                         ) -> list[list[tuple[str, float]]]:
+    """One-shot convenience over :class:`FusedIdentifier` (which callers
+    on a hot loop should construct once — the resize fold happens at
+    init)."""
+    return FusedIdentifier(embedder, classifier,
+                           crop_size).identify_batch(frames,
+                                                     centers_per_frame)

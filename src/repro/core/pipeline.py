@@ -20,6 +20,17 @@ amortized back to per-request events (see docs/ai_tax_accounting.md).
 With ``batch_size=1`` the pipeline degenerates to per-item processing
 through the very same code path, so batched and unbatched runs are
 directly comparable.
+
+The identify hot loop is device-resident by default (``fast_path=True``):
+raw uint8 crops go up, (name-index, score) pairs come down, and the
+resize/embed/classify chain runs as one jitted program
+(:class:`repro.core.facerec.FusedIdentifier`). Every host<->device
+boundary logs a ``transfer`` event with its payload bytes, so
+``PipelineResult.ai_tax()`` splits AI vs pre/post-processing vs data
+movement and ``benchmarks/fig_fused_path.py`` can show the transfer
+bytes the fused path eliminates. ``fast_path=False`` keeps the unfused
+crop -> device resize -> thumbnail -> device embed -> host classify
+chain for comparison.
 """
 from __future__ import annotations
 
@@ -60,12 +71,13 @@ class StreamingPipeline:
     def __init__(self, *, n_frames: int = 60, fuse_ingest_detect: bool = True,
                  n_identify_workers: int = 2, seed: int = 0,
                  gallery_size: int = 8, batch_size: int = 1,
-                 batch_timeout_ms: float = 5.0):
+                 batch_timeout_ms: float = 5.0, fast_path: bool = True):
         self.n_frames = n_frames
         self.fused = fuse_ingest_detect
         self.n_workers = n_identify_workers
         self.batch_size = max(1, batch_size)
         self.batch_timeout_s = batch_timeout_ms / 1e3
+        self.fast_path = fast_path
         self.video = VideoStream(seed=seed)
         self.log = EventLog()
         self.embedder = facerec.Embedder()
@@ -75,6 +87,13 @@ class StreamingPipeline:
         gallery_embs = self.embedder.embed_batch(thumbs.astype(np.float32))
         self.classifier = facerec.Classifier(
             {f"person_{i}": gallery_embs[i] for i in range(gallery_size)})
+        # device-resident identify: resize operator pre-composed with the
+        # embedder's first layer (see facerec.FusedIdentifier); with
+        # fast_path=False the identify loop runs the unfused
+        # crop->resize->embed->host-classify chain for comparison
+        self.fused_identifier = (
+            facerec.FusedIdentifier(self.embedder, self.classifier)
+            if fast_path else None)
         # broker topics (queues); maxsize models bounded broker capacity
         self.faces_topic: queue.Queue = queue.Queue(maxsize=4096)
         self.frames_topic: queue.Queue = queue.Queue(maxsize=1024)
@@ -90,6 +109,24 @@ class StreamingPipeline:
         with self._stats_lock:
             base = self.batch_stats.get(stage, BatchStats())
             self.batch_stats[stage] = base.merge(stats)
+
+    def _log_batch_transfers(self, items, boundary: str, h2d: int,
+                             d2h: int) -> None:
+        """Per-item transfer events for one batched boundary crossing.
+
+        The batch's boundary bytes (padding included — padded rows
+        cross too) are split across its items, remainder on the first,
+        so per-request accounting and batch totals both stay exact.
+        """
+        t = time.perf_counter()
+        B = len(items)
+        for j, item in enumerate(items):
+            rid = item[0]
+            extra_up, extra_dn = (h2d % B, d2h % B) if j == 0 else (0, 0)
+            self.log.log_transfer(rid, "h2d", h2d // B + extra_up,
+                                  boundary, t)
+            self.log.log_transfer(rid, "d2h", d2h // B + extra_dn,
+                                  boundary, t)
 
     # ---- stages ------------------------------------------------------------
 
@@ -110,6 +147,13 @@ class StreamingPipeline:
                 small = np.asarray(ops.resize_bilinear(
                     jnp.asarray(frame.pixels, jnp.float32),
                     frame.pixels.shape[0] // 2, frame.pixels.shape[1] // 2))
+                # emit uint8 once: 4x smaller broker payloads, and every
+                # downstream consumer (detect cast, crop) sees one dtype
+                small = np.clip(small, 0, 255).astype(np.uint8)
+            self.log.log_transfer(frame.index, "h2d",
+                                  frame.pixels.size * 4, "ingest_resize")
+            self.log.log_transfer(frame.index, "d2h",
+                                  small.size * 4, "ingest_resize")
             item = (frame.index, small, frame.true_boxes, time.perf_counter())
             if self.fused:
                 if (batch := batcher.push(item)) is not None:
@@ -142,21 +186,51 @@ class StreamingPipeline:
         self._merge_stats("detect", batcher.stats)
 
     def _detect_batch(self, items):
-        """Detect + crop over a stacked frame batch; per-request events."""
+        """Detect + crop over a stacked frame batch; per-request events.
+
+        fast_path: the per-face payload pushed to the faces topic is the
+        raw uint8 crop (pure numpy slicing — the resize moved on-device
+        into the fused identify program). Unfused: crops round-trip
+        through the device resize here and float32 thumbnails cross the
+        broker, exactly the transfer tax the fused path eliminates.
+        """
         B = len(items)
-        smalls = np.stack([it[1] for it in items]).astype(np.uint8)
+        frames = [it[1] for it in items]
+        smalls = np.stack(frames)
         t0 = time.perf_counter()
         centers_per = facerec.detect_faces_batch(smalls)
-        thumbs_per = facerec.crop_thumbnails_batch(
-            [it[1] for it in items], centers_per)
+        if self.fast_path:
+            crops, counts = facerec.crop_stacks(frames, centers_per)
+            faces_per = (facerec._regroup(crops, counts) if crops is not None
+                         else [[] for _ in items])
+        else:
+            faces_per = facerec.crop_thumbnails_batch(frames, centers_per)
         t1 = time.perf_counter()
         # amortize the batched span back to per-request detect events
         dt = (t1 - t0) / B
         for i, (rid, small, _, _) in enumerate(items):
             self.log.log(rid, "detect", t0 + i * dt, t0 + (i + 1) * dt,
                          payload_bytes=small.nbytes, batch_size=B)
-        for (rid, _small, true_boxes, _), centers, thumbs in zip(
-                items, centers_per, thumbs_per):
+        # boundary bytes: padded frame stack up, heatmaps down (both
+        # paths); the unfused path pays the crop->thumbnail resize
+        # round trip on top
+        Bp = facerec._pad_pow2(B)
+        H, W = smalls.shape[1:3]
+        pool = facerec.DETECT_POOL
+        self._log_batch_transfers(
+            items, "detect",
+            h2d=Bp * H * W * 3 * smalls.itemsize,
+            d2h=Bp * (H // pool) * (W // pool) * 4)
+        n_faces = sum(len(c) for c in centers_per)
+        if not self.fast_path and n_faces:
+            Np = facerec._pad_pow2(n_faces)
+            crop_px = facerec.CROP_SIZE * facerec.CROP_SIZE * 3
+            thumb_px = facerec.THUMB * facerec.THUMB * 3
+            self._log_batch_transfers(items, "crop_resize",
+                                      h2d=Np * crop_px * 4,
+                                      d2h=Np * thumb_px * 4)
+        for (rid, _small, true_boxes, _), centers, faces in zip(
+                items, centers_per, faces_per):
             self.ground_truth += len(true_boxes)
             self.detected += len(centers)
             # match detections to ground truth (within 1.5x blob size)
@@ -165,29 +239,45 @@ class StreamingPipeline:
                        and abs(cx - tx / 2) < 1.5 * ts
                        for cy, cx in centers):
                     self.matched += 1
-            for thumb in thumbs:
-                self.faces_topic.put((rid, thumb, time.perf_counter()))
+            for face in faces:
+                self.faces_topic.put((rid, face, time.perf_counter()))
 
     def _identify_loop(self):
         batcher = Batcher(self.faces_topic, batch_size=self.batch_size,
                           timeout_s=self.batch_timeout_s, stop=_STOP)
         for batch in batcher:
             t_deq = time.perf_counter()
-            for rid, thumb, t_q in batch:
+            for rid, face, t_q in batch:
                 self.log.log(rid, "wait", t_q, t_deq,
-                             payload_bytes=thumb.nbytes)
+                             payload_bytes=face.nbytes)
             B = len(batch)
-            stack = np.stack([thumb for _, thumb, _ in batch])
+            stack = np.stack([face for _, face, _ in batch])
             t0 = time.perf_counter()
-            embs = self.embedder.embed_batch(stack)
-            named = self.classifier.identify_batch(embs)
+            if self.fused_identifier is not None:
+                # one device program: uint8 crops up, (name-idx, score)
+                # down — embed + gallery similarity never leave HBM
+                named = self.fused_identifier.identify_crops(stack)
+            else:
+                embs = self.embedder.embed_batch(stack)
+                named = self.classifier.identify_batch(embs)
             t1 = time.perf_counter()
+            Bp = facerec._pad_pow2(B)
+            if self.fused_identifier is not None:
+                # downlink: one int32 name-index + one f32 score per row
+                self._log_batch_transfers(batch, "identify_fused",
+                                          h2d=Bp * stack[0].nbytes,
+                                          d2h=Bp * (np.int32().nbytes
+                                                    + np.float32().nbytes))
+            else:
+                self._log_batch_transfers(batch, "embed",
+                                          h2d=Bp * stack[0].nbytes,
+                                          d2h=Bp * facerec.EMBED_DIM * 4)
             dt = (t1 - t0) / B
             results = []
-            for i, ((rid, thumb, _), (name, sim)) in enumerate(
+            for i, ((rid, face, _), (name, sim)) in enumerate(
                     zip(batch, named)):
                 self.log.log(rid, "identify", t0 + i * dt, t0 + (i + 1) * dt,
-                             payload_bytes=thumb.nbytes, batch_size=B)
+                             payload_bytes=face.nbytes, batch_size=B)
                 results.append((rid, name, sim))
             with self._ident_lock:
                 self.identities.extend(results)

@@ -35,14 +35,16 @@ class TaxedStep:
         t0 = t()
         x_dev = jax.device_put(x) if x is not None else None
         jax.block_until_ready(x_dev)
-        self.log.log(request_id, f"{self.name}/h2d", t0, t(), _nbytes(x))
+        self.log.log_transfer(request_id, "h2d", _nbytes(x), self.name,
+                              t0, t(), stage=f"{self.name}/h2d")
         t0 = t()
         y = compute(x_dev) if x_dev is not None else compute()
         jax.block_until_ready(y)
         self.log.log(request_id, f"{self.name}/compute", t0, t())
         t0 = t()
         y_host = jax.device_get(y)
-        self.log.log(request_id, f"{self.name}/d2h", t0, t(), _nbytes(y_host))
+        self.log.log_transfer(request_id, "d2h", _nbytes(y_host), self.name,
+                              t0, t(), stage=f"{self.name}/d2h")
         if post is not None:
             t0 = t()
             y_host = post(y_host)
@@ -52,10 +54,14 @@ class TaxedStep:
     def breakdown(self) -> dict:
         per = self.log.breakdown()
         compute = sum(v for k, v in per.items() if k.endswith("/compute"))
+        transfer = sum(v for k, v in per.items()
+                       if k.endswith(("/h2d", "/d2h")))
         total = sum(per.values())
         return {"per_stage": per,
                 "ai_fraction": compute / total if total else 0.0,
-                "tax_fraction": 1 - (compute / total if total else 0.0)}
+                "tax_fraction": 1 - (compute / total if total else 0.0),
+                "transfer_fraction": transfer / total if total else 0.0,
+                "transfer_bytes": self.log.transfer_bytes()}
 
 
 def _nbytes(x) -> int:

@@ -67,6 +67,8 @@ def attention(
     scale: float | None = None,
     impl: Impl | None = None,
     q_chunk: int = 1024,
+    blk_q: int | None = None,
+    blk_k: int | None = None,
 ) -> jax.Array:
     impl = _resolve(impl)
     if impl == "ref":
@@ -74,8 +76,17 @@ def attention(
                               q_offset=q_offset, kv_len=kv_len, scale=scale)
     if impl in ("pallas", "pallas_interpret"):
         from repro.kernels import flash_attention as fa
+        if blk_q is None or blk_k is None:
+            from repro.kernels import autotune
+            tuned = autotune.attention_tiling(q.shape[1], k.shape[1],
+                                              q.shape[-1], str(q.dtype))
+            if tuned is not None:   # else: kernel's own clamped defaults
+                blk_q = blk_q if blk_q is not None else tuned["blk_q"]
+                blk_k = blk_k if blk_k is not None else tuned["blk_k"]
+        blks = {kk: vv for kk, vv in
+                (("blk_q", blk_q), ("blk_k", blk_k)) if vv is not None}
         return fa.flash_attention(q, k, v, causal=causal, window=window,
-                                  q_offset=q_offset, scale=scale,
+                                  q_offset=q_offset, scale=scale, **blks,
                                   interpret=(impl == "pallas_interpret"))
     return _xla_attention(q, k, v, causal=causal, window=window,
                           q_offset=q_offset, kv_len=kv_len, scale=scale,
@@ -369,17 +380,47 @@ def mamba_decode_step(delta, A, Bt, Ct, x, h):
 # Matmul (batched-inference contraction for the micro-batched face models)
 # --------------------------------------------------------------------------
 
-def matmul(a: jax.Array, b: jax.Array, *, impl: Impl | None = None,
-           blk_m: int = 128, blk_n: int = 128,
-           blk_k: int = 512) -> jax.Array:
-    """(M, K) @ (K, N) with float32 accumulation."""
+def matmul(a: jax.Array, b: jax.Array, *, bias: jax.Array | None = None,
+           epilogue: str = "none", impl: Impl | None = None,
+           blk_m: int | None = None, blk_n: int | None = None,
+           blk_k: int | None = None) -> jax.Array:
+    """(M, K) @ (K, N) with float32 accumulation.
+
+    ``bias`` ((N,)) and ``epilogue`` (``"none"``/``"tanh"``) fuse the
+    MLP tail into the contraction — on the Pallas path they run on the
+    accumulator in VMEM, skipping an HBM round trip between a layer's
+    matmul and its activation.
+
+    Block sizes left as ``None`` resolve to autotuned tilings for this
+    (shape, dtype) from :mod:`repro.kernels.autotune` (persistent-cache
+    lookup; a miss runs the candidate sweep once and memoizes).
+    """
     impl = _resolve(impl)
     if impl in ("pallas", "pallas_interpret"):
         from repro.kernels import matmul as mm
-        return mm.matmul(a, b, blk_m=blk_m, blk_n=blk_n, blk_k=blk_k,
+        blocks = _tuned_matmul_blocks(a.shape, b.shape, a.dtype,
+                                      blk_m, blk_n, blk_k)
+        return mm.matmul(a, b, bias=bias, epilogue=epilogue, **blocks,
                          interpret=(impl == "pallas_interpret"))
     # ref and xla coincide: XLA's dot is already the memory-optimal form
-    return _ref.matmul(a, b)
+    out = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32))
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    if epilogue == "tanh":
+        out = jnp.tanh(out)
+    return out.astype(a.dtype)
+
+
+def _tuned_matmul_blocks(a_shape, b_shape, dtype, blk_m, blk_n, blk_k):
+    """Fill unspecified block sizes from the autotune cache."""
+    if blk_m is not None and blk_n is not None and blk_k is not None:
+        return {"blk_m": blk_m, "blk_n": blk_n, "blk_k": blk_k}
+    from repro.kernels import autotune
+    tuned = autotune.matmul_tiling(a_shape[0], a_shape[1], b_shape[1],
+                                   str(dtype))
+    return {"blk_m": blk_m if blk_m is not None else tuned["blk_m"],
+            "blk_n": blk_n if blk_n is not None else tuned["blk_n"],
+            "blk_k": blk_k if blk_k is not None else tuned["blk_k"]}
 
 
 # --------------------------------------------------------------------------
@@ -387,10 +428,16 @@ def matmul(a: jax.Array, b: jax.Array, *, impl: Impl | None = None,
 # --------------------------------------------------------------------------
 
 def resize_bilinear(img: jax.Array, out_h: int, out_w: int,
-                    *, impl: Impl | None = None) -> jax.Array:
+                    *, impl: Impl | None = None,
+                    blk_oh: int | None = None) -> jax.Array:
     impl = _resolve(impl)
     if impl in ("pallas", "pallas_interpret"):
         from repro.kernels import resize as rs
-        return rs.resize_bilinear(img, out_h, out_w,
+        if blk_oh is None:
+            from repro.kernels import autotune
+            blk_oh = autotune.resize_tiling(
+                img.shape[-3], img.shape[-2], out_h, out_w,
+                str(img.dtype))["blk_oh"]
+        return rs.resize_bilinear(img, out_h, out_w, blk_oh=blk_oh,
                                   interpret=(impl == "pallas_interpret"))
     return _ref.resize_bilinear(img, out_h, out_w)

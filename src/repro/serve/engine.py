@@ -40,7 +40,8 @@ class Request:
 
 class ServingEngine:
     def __init__(self, model, params, *, batch_slots: int = 4,
-                 cache_len: int = 128, greedy: bool = True):
+                 cache_len: int = 128, greedy: bool = True,
+                 fast_path: bool = True):
         self.model = model
         self.params = params
         self.slots = batch_slots
@@ -54,7 +55,18 @@ class ServingEngine:
                                  timeout_s=0.0)
         self.active: list[Request | None] = [None] * batch_slots
         self.greedy = greedy
-        self._decode = jax.jit(model.decode_step)
+        # fast_path: greedy token selection is fused into the jitted
+        # decode program, so one int32 crosses device->host per token;
+        # the unfused path fetches the full logit row and argmaxes on
+        # the host (the classic glue-code pattern the paper taxes)
+        self.fast_path = fast_path
+        if fast_path:
+            def _decode_fused(params, cache, tokens):
+                logits, cache = model.decode_step(params, cache, tokens)
+                return jnp.argmax(logits.reshape(-1)).astype(jnp.int32), cache
+            self._decode = jax.jit(_decode_fused)
+        else:
+            self._decode = jax.jit(model.decode_step)
 
     def submit(self, req: Request) -> None:
         req.t_submit = time.perf_counter()
@@ -68,12 +80,21 @@ class ServingEngine:
     def _prefill_one(self, req: Request):
         t0 = time.perf_counter()
         tokens = jnp.asarray(req.prompt[None, :])
+        self.log.log_transfer(req.rid, "h2d", int(tokens.nbytes), "prefill")
         logits, cache = self.model.prefill(self.params, {"tokens": tokens},
                                            cache_len=self.cache_len)
         jax.block_until_ready(logits)
         self.log.log(req.rid, "prefill", t0, time.perf_counter(),
                      int(req.prompt.nbytes))
-        nxt = int(jnp.argmax(logits[0]))
+        if self.fast_path:
+            # argmax on device; only the winning index crosses
+            idx = jnp.argmax(logits[0])
+            self.log.log_transfer(req.rid, "d2h", int(idx.nbytes), "prefill")
+            nxt = int(idx)
+        else:
+            row = np.asarray(logits[0])
+            self.log.log_transfer(req.rid, "d2h", int(row.nbytes), "prefill")
+            nxt = int(np.argmax(row))
         req.tokens.append(nxt)
         return cache, nxt
 
@@ -98,10 +119,25 @@ class ServingEngine:
                     continue
                 t0 = time.perf_counter()
                 tok = jnp.asarray([[req.tokens[-1]]], jnp.int32)
-                logits, caches[i] = self._decode(self.params, caches[i], tok)
-                jax.block_until_ready(logits)
-                self.log.log(req.rid, "decode", t0, time.perf_counter())
-                nxt = int(jnp.argmax(logits[0]))
+                self.log.log_transfer(req.rid, "h2d", int(tok.nbytes),
+                                      "decode")
+                if self.fast_path:
+                    nxt_dev, caches[i] = self._decode(self.params, caches[i],
+                                                      tok)
+                    jax.block_until_ready(nxt_dev)
+                    self.log.log(req.rid, "decode", t0, time.perf_counter())
+                    self.log.log_transfer(req.rid, "d2h",
+                                          int(nxt_dev.nbytes), "decode")
+                    nxt = int(nxt_dev)
+                else:
+                    logits, caches[i] = self._decode(self.params, caches[i],
+                                                     tok)
+                    jax.block_until_ready(logits)
+                    self.log.log(req.rid, "decode", t0, time.perf_counter())
+                    row = np.asarray(logits[0])
+                    self.log.log_transfer(req.rid, "d2h", int(row.nbytes),
+                                          "decode")
+                    nxt = int(np.argmax(row))
                 req.tokens.append(nxt)
                 at_cap = int(caches[i]["cur_len"]) >= self.cache_len - 1
                 if len(req.tokens) >= req.max_tokens or at_cap:

@@ -1,0 +1,19 @@
+"""Shared test fixtures."""
+import pytest
+
+from repro.kernels import autotune
+
+
+@pytest.fixture(autouse=True)
+def _hermetic_autotune_cache(tmp_path):
+    """Point the process-wide autotune cache at a per-test overlay.
+
+    Tests that resolve tilings through ops dispatch (blk_*=None) must
+    neither read a developer's ~/.cache overlay (entries there could
+    silently change which blocks a test exercises) nor write to $HOME.
+    The committed seed stays readable, so hot-path shapes still hit it.
+    """
+    prev = autotune._CACHE
+    autotune.set_cache(autotune.AutotuneCache(path=tmp_path / "tune.json"))
+    yield
+    autotune.set_cache(prev)

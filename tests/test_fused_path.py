@@ -1,0 +1,141 @@
+"""Device-resident fast path: fused identify numerics vs the unfused
+oracle, transfer-tax accounting, and end-to-end pipeline equivalence."""
+import numpy as np
+import pytest
+
+from repro.core import facerec
+from repro.core.events import EventLog
+from repro.core.pipeline import StreamingPipeline
+from repro.data.video import VideoStream
+
+
+@pytest.fixture(scope="module")
+def models():
+    emb = facerec.Embedder()
+    rng = np.random.default_rng(0)
+    thumbs = rng.uniform(0, 255, (6, facerec.THUMB, facerec.THUMB, 3)) \
+        .astype(np.float32)
+    gal = {f"p{i}": e for i, e in enumerate(emb.embed_batch(thumbs))}
+    return emb, facerec.Classifier(gal)
+
+
+def _oracle(frames, centers, emb, clf):
+    """The unfused chain: crop -> device resize -> embed -> classify."""
+    thumbs_per = facerec.crop_thumbnails_batch(frames, centers)
+    flat = [t for ts in thumbs_per for t in ts]
+    if not flat:
+        return []
+    return clf.identify_batch(emb.embed_batch(np.stack(flat)))
+
+
+def _frames_with_faces(n, seed=3):
+    vs = VideoStream(seed=seed)
+    frames, centers = [], []
+    while sum(len(c) for c in centers) < n:
+        f = vs.next_frame().pixels
+        c = facerec.detect_faces(f)
+        frames.append(f)
+        centers.append(c)
+    return frames, centers
+
+
+@pytest.mark.parametrize("n_faces", [1, 3, 8])
+def test_fused_matches_unfused_oracle(models, n_faces):
+    """Fold numerics: fused == crop+resize+embed+identify within 1e-4,
+    including ragged (non-pow2) batches that hit the padding path."""
+    emb, clf = models
+    frames, centers = _frames_with_faces(n_faces)
+    # trim to exactly n_faces detections so each case is a ragged batch
+    total = 0
+    for i, c in enumerate(centers):
+        keep = min(len(c), n_faces - total)
+        centers[i] = c[:keep]
+        total += keep
+    want = _oracle(frames, centers, emb, clf)
+    got = facerec.identify_fused_batch(frames, centers, emb, clf)
+    flat = [p for ps in got for p in ps]
+    assert len(flat) == len(want) == n_faces
+    for (n1, s1), (n2, s2) in zip(want, flat):
+        assert n1 == n2
+        assert s1 == pytest.approx(s2, abs=1e-4)
+
+
+def test_fused_empty_and_single(models):
+    emb, clf = models
+    fused = facerec.FusedIdentifier(emb, clf)
+    frames = [VideoStream(seed=1).next_frame().pixels]
+    assert fused.identify_batch(frames, [[]]) == [[]]
+    # B=1 degenerates through the same padded path
+    out = fused.identify_batch(frames, [[(60, 100)]])
+    assert len(out[0]) == 1
+    name, score = out[0][0]
+    assert name in clf.names and -1.0 <= score <= 1.0 + 1e-6
+
+
+def test_fused_grouping_matches_centers(models):
+    emb, clf = models
+    frames, centers = _frames_with_faces(5)
+    out = facerec.FusedIdentifier(emb, clf).identify_batch(frames, centers)
+    assert [len(o) for o in out] == [len(c) for c in centers]
+
+
+def test_transfer_event_accounting():
+    log = EventLog()
+    log.log_transfer(0, "h2d", 1000, "embed")
+    log.log_transfer(0, "d2h", 24, "embed")
+    log.log_transfer(1, "h2d", 500, "identify_fused")
+    tb = log.transfer_bytes()
+    assert (tb["h2d"], tb["d2h"], tb["total"]) == (1500, 24, 1524)
+    assert log.transfer_bytes(boundary="embed")["total"] == 1024
+    tax = log.ai_tax(ai_stages=set())
+    assert tax["transfer_bytes"]["total"] == 1524
+    assert "transfer_fraction" in tax
+
+
+@pytest.fixture(scope="module")
+def pipe_results():
+    kw = dict(n_frames=24, seed=0, batch_size=4, batch_timeout_ms=100.0,
+              n_identify_workers=2)
+    return {fast: StreamingPipeline(fast_path=fast, **kw).run()
+            for fast in (False, True)}
+
+
+def test_pipeline_fast_path_equivalent_results(pipe_results):
+    slow, fast = pipe_results[False], pipe_results[True]
+    assert (fast.detected, fast.ground_truth, fast.matched) == \
+        (slow.detected, slow.ground_truth, slow.matched)
+    ids = lambda r: sorted((rid, name) for rid, name, _ in r.identities)
+    assert ids(fast) == ids(slow)
+
+
+def test_pipeline_fast_path_cuts_face_transfer_bytes_4x(pipe_results):
+    """The acceptance bar: >=4x fewer boundary bytes per identified face."""
+    def face_bytes(r):
+        return sum(e.payload_bytes for e in r.log.events
+                   if e.meta.get("kind") == "transfer"
+                   and e.meta.get("boundary") in
+                   ("crop_resize", "embed", "identify_fused"))
+    slow, fast = pipe_results[False], pipe_results[True]
+    assert fast.detected > 0
+    per_slow = face_bytes(slow) / slow.detected
+    per_fast = face_bytes(fast) / fast.detected
+    assert per_slow >= 4 * per_fast, (per_slow, per_fast)
+
+
+def test_pipeline_transfer_split_in_tax(pipe_results):
+    tax = pipe_results[True].ai_tax()
+    assert tax["transfer_bytes"]["total"] > 0
+    assert 0.0 <= tax["transfer_fraction"] <= tax["tax_fraction"] + 1e-9
+    # uint8 ingest satellite: broker frame payloads are uint8-sized
+    waits = [e for e in pipe_results[True].log.events
+             if e.stage == "wait_frames"]
+    assert waits and all(e.payload_bytes == 108 * 192 * 3 for e in waits)
+
+
+def test_pipeline_fast_path_batch1_and_ragged_flush():
+    r = StreamingPipeline(n_frames=12, seed=0, batch_size=1,
+                          fast_path=True).run()
+    assert len(r.identities) == r.detected
+    r2 = StreamingPipeline(n_frames=12, seed=0, batch_size=64,
+                           batch_timeout_ms=2.0, fast_path=True).run()
+    assert len(r2.identities) == r2.detected    # linger flush, ragged B

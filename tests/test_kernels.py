@@ -251,3 +251,38 @@ def test_matmul_small_blocks_accumulate():
     one = ops.matmul(a, b, impl="pallas_interpret", blk_k=1024)
     np.testing.assert_allclose(small, one, atol=1e-4, rtol=1e-4)
     np.testing.assert_allclose(small, ref.matmul(a, b), atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("M,K,N,with_bias,epi", [
+    (16, 256, 128, True, "tanh"),     # the fused MLP-layer shape class
+    (13, 200, 37, True, "tanh"),      # ragged: epilogue on padded blocks
+    (16, 256, 128, True, "none"),     # bias only
+    (16, 256, 128, False, "tanh"),    # tanh only
+])
+def test_matmul_epilogue_vs_ref(M, K, N, with_bias, epi):
+    """Fused epilogue == tanh(ref.matmul(a, b) + bias) elementwise."""
+    a = _rand((M, K), seed=1, scale=0.3)
+    b = _rand((K, N), seed=2, scale=0.3)
+    bias = _rand((N,), seed=3) if with_bias else None
+    want = ref.matmul(a, b).astype(jnp.float32)
+    if bias is not None:
+        want = want + bias
+    if epi == "tanh":
+        want = jnp.tanh(want)
+    for impl in ("pallas_interpret", "xla"):
+        out = ops.matmul(a, b, bias=bias, epilogue=epi, impl=impl,
+                         blk_m=8, blk_n=128, blk_k=128)
+        np.testing.assert_allclose(out, want, atol=1e-5, rtol=1e-5)
+
+
+def test_matmul_epilogue_applied_once_across_k_blocks():
+    """The epilogue must fire only on the last k step: many k blocks
+    and one k block agree exactly."""
+    a = _rand((8, 512), seed=5, scale=0.2)
+    b = _rand((512, 128), seed=6, scale=0.2)
+    bias = _rand((128,), seed=7)
+    many = ops.matmul(a, b, bias=bias, epilogue="tanh",
+                      impl="pallas_interpret", blk_m=8, blk_n=128, blk_k=128)
+    one = ops.matmul(a, b, bias=bias, epilogue="tanh",
+                     impl="pallas_interpret", blk_m=8, blk_n=128, blk_k=512)
+    np.testing.assert_allclose(many, one, atol=1e-5, rtol=1e-5)
