@@ -1,0 +1,116 @@
+"""Cluster scaling & tail latency: measured vs modeled (paper §5.3-5.5
+at deployment scale). Three sections:
+
+  * ``cluster/…`` — live multi-replica runs across acceleration S:
+    p50/p95/p99 tail latency, throughput, and measured broker-storage /
+    consumer utilization printed next to the closed-form rho — the
+    per-point overlay;
+  * ``knee/…``    — the headline closed loop: live cluster, DES, and
+    closed-form queueing each locate the destabilizing S for
+    (replicas × drives) configurations, with agreement within the
+    tolerances documented in ``repro.cluster.crossval``;
+  * ``tco/…``     — the DES-measured knees per drive count feed
+    ``tco.measured_comparison``, so the Tables 3/4 purpose-built
+    comparison is provisioned from executed measurements instead of
+    the paper's "4 drives supports 32x" constant.
+
+``--smoke`` shrinks runs/iterations for CI; same code paths throughout.
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import row, timed
+from repro.cluster.cluster import ClusterSpec, ServingCluster
+from repro.cluster.crossval import DES_TOL, LIVE_TOL, des_knee, knee_comparison
+from repro.core import tco
+from repro.core.broker import BrokerConfig
+
+
+def _live_rows(smoke: bool) -> list[str]:
+    out = []
+    speedups = (4.0,) if smoke else (1.0, 4.0, 6.0, 9.0)
+    sim_time = 3.0 if smoke else 6.0
+    for s in speedups:
+        spec = ClusterSpec(speedup=s, sim_time=sim_time, warmup=1.0)
+        res, us = timed(ServingCluster(spec).run)
+        out.append(row(
+            f"cluster/R{spec.n_replicas}_d1_S{s:g}", us,
+            f"p50_ms={res.latency.p50*1e3:.0f};"
+            f"p95_ms={res.latency.p95*1e3:.0f};"
+            f"p99_ms={res.latency.p99*1e3:.0f};"
+            f"thr={res.throughput:.0f}/s;"
+            f"store_util={res.utilization['broker_storage_write']:.2f};"
+            f"store_rho={res.predicted_rho['broker_storage_write']:.2f};"
+            f"cons_util={res.utilization['consumers']:.2f};"
+            f"cons_rho={res.predicted_rho['consumers']:.2f};"
+            f"diverged={res.diverged}"))
+    return out
+
+
+def _knee_rows(smoke: bool) -> list[str]:
+    out = []
+    configs = ((1, 8),) if smoke else ((1, 8), (2, 10))
+    for drives, replicas in configs:
+        spec = ClusterSpec(bk=BrokerConfig(drives_per_broker=drives),
+                           n_replicas=replicas,
+                           sim_time=4.0 if smoke else 6.0)
+        cmp_, us = timed(knee_comparison, spec,
+                         des_iters=4 if smoke else 6,
+                         live_iters=2 if smoke else 4)
+        out.append(row(f"knee/{cmp_.row().split(':')[0]}", us,
+                       cmp_.row().split(":", 1)[1]
+                       + f";tol_des={DES_TOL};tol_live={LIVE_TOL}"))
+    return out
+
+
+def _tco_rows(smoke: bool) -> list[str]:
+    drives = (1, 2) if smoke else (1, 2, 3, 4)
+    target = 12.0 if smoke else 32.0
+    knees = {}
+    for d in drives:
+        spec = ClusterSpec(bk=BrokerConfig(drives_per_broker=d))
+        knees[d], _ = timed(des_knee, spec,
+                            iters=4 if smoke else 6,
+                            sim_time=10.0 if smoke else 20.0)
+        # a knee that disagrees with the closed form by more than the
+        # documented tolerance is a measurement failure (e.g. an
+        # unreached bisection bracket), not an input to provisioning
+        closed = spec.closed_form_knee()
+        if abs(knees[d] - closed) / closed > DES_TOL:
+            raise RuntimeError(
+                f"DES knee {knees[d]:.2f} for drives={d} fails the "
+                f"{DES_TOL:.0%} cross-validation gate (closed form "
+                f"{closed:.2f}); refusing to provision TCO from it")
+    # 5% margin = the bisection's knee-detection resolution (documented
+    # in tco.provision_drives): the paper's 32x sits exactly ON the
+    # 4-drive knee, so reading the measurement needs its error bar
+    d = tco.provision_drives(target, knees, tolerance=0.05)
+    comp, us = timed(tco.measured_comparison, target, knees, tolerance=0.05)
+    out = [row("tco/measured_knees", 0.0,
+               ";".join(f"d{k}={v:.1f}" for k, v in sorted(knees.items()))
+               + f";target_S={target:g}")]
+    derived = (f"drives={d};"
+               f"equipment=${comp.homogeneous.equipment_cost:,.0f};"
+               f"saving={comp.saving_fraction:.3f}")
+    if not smoke:
+        paper = tco.paper_comparison(support_32x=True)
+        match = (comp.homogeneous.equipment_cost
+                 == paper.homogeneous.equipment_cost)
+        derived += (f";paper_equipment="
+                    f"${paper.homogeneous.equipment_cost:,.0f};"
+                    f"matches_paper={match}")
+    out.append(row("tco/measured_provisioning", us, derived))
+    return out
+
+
+def run(smoke: bool = False) -> list[str]:
+    return _live_rows(smoke) + _knee_rows(smoke) + _tco_rows(smoke)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized runs (fewer configs, shorter windows)")
+    args = ap.parse_args()
+    print("\n".join(run(smoke=args.smoke)))

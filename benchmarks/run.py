@@ -20,6 +20,7 @@ MODULES = [
     "benchmarks.fig14_object_detection",
     "benchmarks.fig15_unlocking",
     "benchmarks.fig_batching_sweep",
+    "benchmarks.fig_cluster_scaling",
     "benchmarks.fig_fused_path",
     "benchmarks.fig_roofline_sweep",
     "benchmarks.tab34_tco",

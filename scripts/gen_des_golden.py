@@ -1,0 +1,29 @@
+"""Regenerate the DES golden regression fixture.
+
+Writes ``tests/fixtures/des_golden.json`` from the seeded runs defined
+in ``tests/golden_des.py``. Run (``make des-golden``) ONLY when a
+deliberate simulator change is supposed to shift the paper-validated
+numbers — the whole point of the fixture is that cluster/infrastructure
+refactors cannot move them silently.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "tests"))
+
+from golden_des import compute_goldens  # noqa: E402
+
+
+def main() -> None:
+    path = ROOT / "tests" / "fixtures" / "des_golden.json"
+    path.write_text(json.dumps(compute_goldens(), indent=2,
+                               sort_keys=True) + "\n")
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

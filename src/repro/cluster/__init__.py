@@ -1,0 +1,32 @@
+"""Multi-replica serving cluster (paper §5 at deployment scale).
+
+The live analogue of the DES: N replica consumers behind the
+Kafka-model ``Topic``/``BrokerConfig`` substrate, partition-aware (max
+one consumer per partition, rebalance on replica add/remove), fed by
+open- or closed-loop load generators, with per-request tail-latency
+percentiles, per-resource utilization, and admission/backpressure — all
+instrumented through the same ``EventLog``/``ai_tax`` machinery as the
+single-replica pipeline.
+
+Modules:
+  * ``scheduler`` — consumer-group partition assignment + rebalance;
+  * ``topic``     — live partitions + paced broker write channels;
+  * ``loadgen``   — open-loop (periodic/Poisson) and closed-loop load;
+  * ``metrics``   — percentiles, tail-latency SLOs, utilization report;
+  * ``cluster``   — the ServingCluster runtime tying them together;
+  * ``crossval``  — measured-vs-modeled knee comparison (live / DES /
+    closed-form), the loop ``benchmarks/fig_cluster_scaling.py`` plots.
+"""
+from repro.cluster.cluster import ClusterResult, ClusterSpec, ServingCluster
+from repro.cluster.crossval import KneeComparison, knee_comparison
+from repro.cluster.loadgen import ClosedLoopLoadGen, OpenLoopLoadGen
+from repro.cluster.metrics import LatencyStats, SLOReport, TailSLO
+from repro.cluster.scheduler import ConsumerGroup
+
+__all__ = [
+    "ClusterResult", "ClusterSpec", "ServingCluster",
+    "KneeComparison", "knee_comparison",
+    "ClosedLoopLoadGen", "OpenLoopLoadGen",
+    "LatencyStats", "SLOReport", "TailSLO",
+    "ConsumerGroup",
+]

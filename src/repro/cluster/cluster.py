@@ -1,0 +1,509 @@
+"""Multi-replica serving cluster runtime (the live measured system).
+
+``ServingCluster`` runs the paper's deployment shape as real threads on
+a real clock: open- or closed-loop producers publish face messages into
+a ``LiveTopic`` whose broker write channels are paced at the modeled
+storage capacity, and N replica consumers — partition-aware members of
+a ``ConsumerGroup`` — drain their assigned partitions through the same
+``Batcher`` the streaming pipeline uses, then serve each message with
+the identification stage.
+
+Two service modes:
+  * ``service="paced"`` — the identify span is the workload's measured
+    constant divided by the AI-acceleration factor S (the paper's
+    sleep-based emulation, §5.2). Every demand/capacity ratio matches
+    the DES and the closed-form queueing model, so the S at which the
+    live cluster destabilizes is directly cross-validatable
+    (``repro.cluster.crossval``).
+  * ``service="real"`` — messages carry actual uint8 crops and the
+    replica runs the SAME device-resident identify stack as
+    ``StreamingPipeline`` (``facerec.build_identify_stack``): real
+    compute, real host<->device boundary, hardware-dependent latency.
+
+Time compression: all modeled durations are divided by
+``time_compression`` so a 6-model-second experiment takes ~1.5 wall
+seconds; results are reported back in model seconds. Demand/capacity
+ratios — and therefore the knee — are invariant under this scaling.
+
+Everything is logged through one ``EventLog`` (model-time stamps):
+``wait`` (partition queue time), ``identify`` (service), ``reject``
+(admission drops), so ``ClusterResult.ai_tax()`` splits AI vs
+tax exactly like the single-replica pipeline.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field, replace
+
+from repro.core.batching import Batcher, BatchStats
+from repro.core.broker import BrokerConfig, Message
+from repro.core.events import EventLog
+from repro.core.queueing import stability_knee, utilizations
+from repro.core.simulator import ClusterSim, FaceRecWorkload
+from repro.cluster.loadgen import ClosedLoopLoadGen, OpenLoopLoadGen
+from repro.cluster.metrics import LatencyStats, SLOReport, TailSLO
+from repro.cluster.scheduler import ConsumerGroup
+from repro.cluster.topic import LiveTopic
+
+
+@dataclass
+class ClusterSpec:
+    """One deployment configuration, shared by all three models.
+
+    The spec is the single source of truth for the cross-validation:
+    ``closed_form_knee`` prices it analytically, ``des_sim`` builds the
+    equivalent discrete-event simulation, and ``ServingCluster`` runs
+    it live. ``n_producers`` scales the full workload down
+    (``eff = n_producers / wl.n_producers``) and the broker bandwidth
+    with it, preserving utilizations — the same trick as
+    ``ClusterSim(scale=...)``.
+    """
+    wl: FaceRecWorkload = field(default_factory=FaceRecWorkload)
+    bk: BrokerConfig = field(default_factory=BrokerConfig)
+    n_replicas: int = 8
+    n_producers: int = 4
+    n_partitions: int | None = None      # default: one per replica
+    speedup: float = 1.0
+    time_compression: float = 4.0
+    sim_time: float = 6.0                # model seconds
+    warmup: float = 1.5
+    seed: int = 0
+    service: str = "paced"               # paced | real
+    arrival: str = "periodic"            # periodic | poisson
+    loop: str = "open"                   # open | closed
+    n_clients: int = 8                   # closed loop population
+    think_s: float = 0.0                 # closed loop think time (model s)
+    admission: str = "none"              # none | drop | block
+    partition_capacity: int = 64         # in-flight bound for drop/block
+    fetch_max_wait_s: float | None = None   # default: bk.fetch_max_wait_s
+
+    @property
+    def eff(self) -> float:
+        return self.n_producers / self.wl.n_producers
+
+    @property
+    def partitions(self) -> int:
+        return self.n_partitions or self.n_replicas
+
+    @property
+    def period_s(self) -> float:
+        """Per-producer inter-arrival time at this S (model seconds)."""
+        div = self.speedup if self.wl.accelerate_ingest else 1.0
+        return self.wl.frame_period / div
+
+    def scaled_broker(self) -> BrokerConfig:
+        return self.bk.scaled(self.eff)
+
+    def scaled_workload(self) -> FaceRecWorkload:
+        return replace(self.wl, n_producers=self.n_producers,
+                       n_consumers=self.n_replicas)
+
+    def closed_form_knee(self) -> float:
+        return stability_knee(self.scaled_workload(), self.scaled_broker())
+
+    def predicted_rho(self) -> dict[str, float]:
+        us = utilizations(self.scaled_workload(), self.scaled_broker(),
+                          self.speedup)
+        return {name: u.rho for name, u in us.items()}
+
+    def des_sim(self, speedup: float | None = None, *, sim_time: float = 20.0,
+                warmup: float = 4.0, seed: int | None = None) -> ClusterSim:
+        """The equivalent DES run (scale pre-applied, so scale=1)."""
+        return ClusterSim(self.scaled_workload(), self.scaled_broker(),
+                          speedup=self.speedup if speedup is None else speedup,
+                          scale=1.0, sim_time=sim_time, warmup=warmup,
+                          seed=self.seed if seed is None else seed)
+
+
+@dataclass
+class ClusterResult:
+    spec_speedup: float
+    n_replicas: int
+    produced: int
+    completed: int
+    dropped: int
+    backlog: int
+    diverged: bool
+    latency: LatencyStats
+    throughput: float                  # completions/s, model time
+    utilization: dict                  # measured busy fractions
+    predicted_rho: dict                # closed-form rho at this S
+    producer_lag_mean: float           # model seconds behind schedule
+    rebalances: int
+    fetch_stats: BatchStats
+    log: EventLog
+    slo: SLOReport | None = None
+    inflight_growth: float = 0.0       # second-half minus first-half mean
+
+    @property
+    def drop_fraction(self) -> float:
+        offered = self.produced + self.dropped
+        return self.dropped / offered if offered else 0.0
+
+    def ai_tax(self) -> dict:
+        return self.log.ai_tax(ai_stages={"identify"})
+
+    def to_dict(self) -> dict:
+        d = dict(self.__dict__)
+        d["latency"] = self.latency.to_dict()
+        d.pop("log")
+        return d
+
+
+class _ReplicaState:
+    """Per-replica accumulators; merged single-threaded at result time."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.latencies: list[tuple[float, float]] = []  # (t_submit, latency)
+        self.busy_model = 0.0
+        self.served = 0
+        self.stats = BatchStats()
+
+
+class ServingCluster:
+    def __init__(self, spec: ClusterSpec, slo: TailSLO | None = None):
+        self.spec = spec
+        self.slo = slo
+        self.log = EventLog()
+        self.group = ConsumerGroup(spec.partitions)
+        self._lock = threading.Lock()          # producer-side counters
+        self.produced = 0
+        self.dropped = 0
+        self._lag_sum = 0.0
+        self._replica_states: dict[str, _ReplicaState] = {}
+        self._replica_threads: list[threading.Thread] = []
+        self._removed: set[str] = set()
+        self._feeder_threads: list[threading.Thread] = []
+        self._done_events: dict[int, threading.Event] = {}
+        self._identify = None                  # lazy, real mode only
+        self._n_spawned = 0
+        self._inflight_samples: list[tuple[float, int]] = []
+
+    # ---- time -------------------------------------------------------------
+
+    def _now_model(self) -> float:
+        return (time.perf_counter() - self.t0) * self.spec.time_compression
+
+    # ---- lifecycle --------------------------------------------------------
+
+    def start(self) -> None:
+        sp = self.spec
+        if sp.service == "real":
+            import numpy as np
+            from repro.core import facerec
+            _, _, fused = facerec.build_identify_stack(
+                seed=sp.seed, fast_path=True)
+            # warm every power-of-two batch bucket the drain-all fetch
+            # can produce BEFORE the clock starts: a mid-run jit
+            # compile (~100ms+) would otherwise masquerade as queueing
+            # collapse and poison the divergence signal
+            for b in (1, 2, 4, 8, 16, 32, 64):
+                fused.identify_crops(
+                    np.zeros((b, 48, 48, 3), np.uint8))
+            self._identify = fused
+        self.t0 = time.perf_counter()
+        self.wall_deadline = self.t0 + sp.sim_time / sp.time_compression
+        self.topic = LiveTopic("faces", sp.partitions, sp.scaled_broker(),
+                               sp.time_compression, self.wall_deadline)
+        self.topic.start()
+        for _ in range(sp.n_replicas):
+            self.add_replica()
+        if sp.loop == "closed":
+            gen = ClosedLoopLoadGen(sp.n_clients, sp.think_s,
+                                    process=sp.arrival, seed=sp.seed)
+            for i in range(gen.n_clients):
+                t = threading.Thread(target=self._client, daemon=True,
+                                     args=(i, gen.think_sampler(i)))
+                self._feeder_threads.append(t)
+                t.start()
+        else:
+            gen = OpenLoopLoadGen(sp.n_producers, sp.period_s,
+                                  process=sp.arrival, seed=sp.seed)
+            for i in range(gen.n_producers):
+                t = threading.Thread(
+                    target=self._producer, daemon=True,
+                    args=(i, gen.schedule(i, sp.sim_time)))
+                self._feeder_threads.append(t)
+                t.start()
+        mon = threading.Thread(target=self._monitor, daemon=True)
+        self._feeder_threads.append(mon)
+        mon.start()
+
+    def _monitor(self) -> None:
+        """Samples the in-flight population for the divergence signal.
+
+        A stable system near the knee legitimately carries a large
+        steady-state in-flight population (Little's law: rate x
+        latency), so an absolute end-of-run backlog can't separate
+        "high but flat" from "growing". The monitor records
+        (t_model, produced - completed) every ~50 ms wall; divergence
+        compares the two post-warmup half-window means.
+        """
+        while time.perf_counter() < self.wall_deadline:
+            # snapshot: add_replica() may insert mid-iteration
+            done = sum(st.served
+                       for st in list(self._replica_states.values()))
+            self._inflight_samples.append(
+                (self._now_model(), self.produced - done))
+            time.sleep(0.05)
+
+    def add_replica(self) -> str:
+        name = f"replica-{self._n_spawned}"
+        self._n_spawned += 1
+        st = _ReplicaState(name)
+        self._replica_states[name] = st
+        # join the group HERE, not in the replica thread: membership is
+        # then synchronous with add/remove calls, so remove_replica()
+        # can never race an in-flight join and leave a ghost member
+        # owning partitions no thread serves
+        self.group.join(name)
+        t = threading.Thread(target=self._replica, daemon=True,
+                             args=(name, st))
+        self._replica_threads.append(t)
+        t.start()
+        return name
+
+    def remove_replica(self, name: str) -> None:
+        """Revoke the replica's partitions; the group rebalances onto
+        the survivors and the thread exits at its next ownership check."""
+        self._removed.add(name)
+        self.group.leave(name)
+
+    def run(self) -> ClusterResult:
+        self.start()
+        for t in self._feeder_threads:
+            t.join()
+        for t in self._replica_threads:
+            t.join()
+        self.topic.join()
+        return self._result()
+
+    # ---- producers (open loop) --------------------------------------------
+
+    def _crop_rng(self, stream: int):
+        """Per-feeder-thread crop generator (real mode): seeding a fresh
+        Generator per message would tax the very path being timed."""
+        import numpy as np
+        return np.random.default_rng(self.spec.seed * 7919 + stream)
+
+    def _produce_one(self, rid: int, scheduled_model: float,
+                     crop_rng=None) -> bool:
+        """Admit + publish one message; False if dropped/rejected."""
+        sp = self.spec
+        part = self.topic.pick_partition()
+        bounded = sp.admission in ("drop", "block")
+        while True:            # check-and-admit atomically across producers
+            with self._lock:
+                if not bounded or part.in_flight < sp.partition_capacity:
+                    part.accepted += 1
+                    self.produced += 1
+                    admitted = True
+                    break
+                if sp.admission == "drop":
+                    self.dropped += 1
+                    admitted = False
+                    break
+            # block: wait for capacity, then RE-check under the lock
+            if time.perf_counter() >= self.wall_deadline:
+                return False
+            time.sleep(0.002)
+        now = self._now_model()
+        if not admitted:
+            self.log.log(rid, "reject", now, now,
+                         payload_bytes=int(sp.wl.face_bytes))
+            return False
+        msg = Message(key=rid, size=sp.wl.face_bytes, t_produced=now)
+        msg.meta["scheduled"] = scheduled_model
+        if sp.service == "real":
+            import numpy as np
+            crop = crop_rng.integers(0, 256, (48, 48, 3), dtype=np.uint8)
+            msg.meta["crop"] = crop
+            msg.size = float(crop.nbytes)
+        with self._lock:
+            self._lag_sum += max(0.0, now - scheduled_model)
+        self.topic.publish(msg, part)
+        return True
+
+    def _producer(self, i: int, schedule: list[float]) -> None:
+        sp = self.spec
+        rng = self._crop_rng(i) if sp.service == "real" else None
+        for k, arrival in enumerate(schedule):
+            wall = self.t0 + arrival / sp.time_compression
+            delay = wall - time.perf_counter()
+            if delay > 0:
+                time.sleep(delay)
+            if time.perf_counter() >= self.wall_deadline:
+                return
+            self._produce_one(i + k * sp.n_producers, arrival, rng)
+
+    # ---- clients (closed loop) --------------------------------------------
+
+    def _client(self, i: int, think) -> None:
+        sp = self.spec
+        rng = self._crop_rng(i) if sp.service == "real" else None
+        k = 0
+        while time.perf_counter() < self.wall_deadline:
+            rid = i + k * sp.n_clients
+            k += 1
+            evt = threading.Event()
+            self._done_events[rid] = evt
+            if self._produce_one(rid, self._now_model(), rng):
+                evt.wait(timeout=max(
+                    0.0, self.wall_deadline - time.perf_counter()))
+            self._done_events.pop(rid, None)
+            pause = think() / sp.time_compression
+            if pause > 0:
+                time.sleep(min(
+                    pause,
+                    max(0.0, self.wall_deadline - time.perf_counter())))
+
+    # ---- replicas ---------------------------------------------------------
+
+    def _replica(self, name: str, st: _ReplicaState) -> None:
+        """Partition-aware consumer loop, one thread per replica.
+
+        Fetch semantics mirror the DES (and Kafka): drain everything a
+        partition has, serve it if it clears ``fetch_min_bytes`` or the
+        oldest record has aged past ``fetch_max_wait_s``, otherwise
+        hold it pending and sweep on — messages keep accumulating WHILE
+        the replica serves other partitions, so fetch batching never
+        eats service capacity. Ownership is re-read every sweep; on
+        revocation, pending records are requeued for the new owner.
+        """
+        sp = self.spec
+        fetch_wait_wall = (sp.bk.fetch_max_wait_s
+                           if sp.fetch_max_wait_s is None
+                           else sp.fetch_max_wait_s) / sp.time_compression
+        batch_cap = max(1, int(sp.bk.fetch_min_bytes // max(
+            sp.wl.face_bytes, 1.0)))
+        batchers: dict[int, Batcher] = {}
+        pending: dict[int, list] = {}
+        while time.perf_counter() < self.wall_deadline:
+            if name in self._removed:
+                break
+            asg = self.group.assignment(name)
+            # revoked partitions: hand any held-back records straight
+            # back to the partition queue so the NEW owner serves them
+            # (not at thread exit — a rebalance survivor keeps running)
+            for pi in list(pending):
+                if pi not in asg.partitions and pending[pi]:
+                    for m in pending.pop(pi):
+                        self.topic.partitions[pi].queue.put(m)
+            if not asg.partitions:
+                time.sleep(0.004)
+                continue
+            served_any = False
+            for pi in asg.partitions:
+                if time.perf_counter() >= self.wall_deadline:
+                    break
+                # generation fence: if membership changed since this
+                # sweep's assignment was read, restart with a fresh
+                # view instead of fetching from a possibly-revoked
+                # partition (shrinks the rebalance overlap to a serve
+                # already in flight — Kafka's cooperative window)
+                if self.group.assignment(name).generation != asg.generation:
+                    break
+                part = self.topic.partitions[pi]
+                b = batchers.get(pi)
+                if b is None:
+                    b = batchers[pi] = Batcher(
+                        part.queue, batch_size=batch_cap, timeout_s=0.0)
+                buf = pending.setdefault(pi, [])
+                buf.extend(b.poll(1 << 30))
+                if not buf:
+                    continue
+                ready = sum(m.size for m in buf)
+                age = time.perf_counter() - buf[0].t_written
+                if (ready < sp.bk.fetch_min_bytes
+                        and age < fetch_wait_wall):
+                    continue
+                pending[pi] = []
+                self._serve(st, part, buf)
+                served_any = True
+            if not served_any:
+                time.sleep(0.002)
+        # fold per-partition fetch stats once, on the way out (results
+        # are read only after the thread joins)
+        st.stats = BatchStats()
+        for b in batchers.values():
+            st.stats = st.stats.merge(b.stats)
+        # hand anything still pending back to the partition queue: the
+        # rebalanced owner (or final backlog accounting) picks it up
+        for pi, buf in pending.items():
+            for m in buf:
+                self.topic.partitions[pi].queue.put(m)
+
+    def _serve(self, st: _ReplicaState, part, batch: list[Message]) -> None:
+        sp = self.spec
+        t_deq = self._now_model()
+        for msg in batch:
+            self.log.log(msg.key, "wait", msg.t_produced, t_deq,
+                         payload_bytes=int(msg.size))
+        if sp.service == "real":
+            import numpy as np
+            stack = np.stack([m.meta["crop"] for m in batch])
+            w0 = time.perf_counter()
+            self._identify.identify_crops(stack)
+            dur_model = ((time.perf_counter() - w0)
+                         * sp.time_compression)
+        else:
+            dur_model = sp.wl.t_identify / sp.speedup * len(batch)
+            time.sleep(dur_model / sp.time_compression)
+        st.busy_model += dur_model
+        t_end = self._now_model()
+        dt = (t_end - t_deq) / len(batch)
+        for j, msg in enumerate(batch):
+            self.log.log(msg.key, "identify", t_deq + j * dt,
+                         t_deq + (j + 1) * dt,
+                         payload_bytes=int(msg.size), batch_size=len(batch))
+            part.consumed += 1
+            st.served += 1
+            st.latencies.append(
+                (msg.t_produced, t_deq + (j + 1) * dt - msg.t_produced))
+            evt = self._done_events.get(msg.key)
+            if evt is not None:
+                evt.set()
+
+    # ---- results ----------------------------------------------------------
+
+    def _result(self) -> ClusterResult:
+        sp = self.spec
+        span_wall = time.perf_counter() - self.t0
+        span_model = span_wall * sp.time_compression
+        states = list(self._replica_states.values())
+        completed = sum(st.served for st in states)
+        backlog = self.produced - completed
+        samples = [lat for st in states for t_sub, lat in st.latencies
+                   if t_sub >= sp.warmup]
+        steady_span = max(span_model - sp.warmup, 1e-9)
+        lag_mean = self._lag_sum / max(self.produced, 1)
+        mid = sp.warmup + 0.5 * (sp.sim_time - sp.warmup)
+        first = [n for t, n in self._inflight_samples
+                 if sp.warmup <= t < mid]
+        second = [n for t, n in self._inflight_samples if t >= mid]
+        growth = ((sum(second) / len(second)) - (sum(first) / len(first))
+                  if first and second else 0.0)
+        diverged = (growth > max(0.04 * max(self.produced, 1), 25)
+                    or lag_mean > 5 * sp.period_s)
+        stats = LatencyStats.from_samples(samples)
+        fetch = BatchStats()
+        for st in states:
+            fetch = fetch.merge(st.stats)
+        util = {
+            "broker_storage_write": self.topic.write_utilization(span_wall),
+            "consumers": sum(st.busy_model for st in states)
+            / (span_model * max(len(states), 1)),
+        }
+        result = ClusterResult(
+            spec_speedup=sp.speedup, n_replicas=len(states),
+            produced=self.produced, completed=completed,
+            dropped=self.dropped, backlog=backlog, diverged=diverged,
+            latency=stats, throughput=len(samples) / steady_span,
+            utilization=util, predicted_rho=sp.predicted_rho(),
+            producer_lag_mean=lag_mean, rebalances=self.group.rebalances,
+            fetch_stats=fetch, log=self.log, inflight_growth=growth)
+        if self.slo is not None:
+            result.slo = self.slo.check(stats, result.drop_fraction)
+        return result

@@ -1,0 +1,93 @@
+"""Open- and closed-loop load generators for the serving cluster.
+
+Open loop models the paper's deployment: cameras tick at a fixed frame
+period regardless of downstream health, so offered load is insensitive
+to latency and an under-provisioned cluster diverges — this is the mode
+the stability knee is measured in. Arrivals are periodic (the paper's
+emulation) or Poisson (rate-matched, for tail studies).
+
+Closed loop models K clients that wait for each response before
+submitting again (plus think time): offered load self-throttles, the
+system cannot diverge, and throughput saturates at capacity instead —
+the contrast the tail-latency docs discuss.
+
+Every random choice flows from one seeded ``random.Random`` per
+producer/client (seed derived deterministically from the generator
+seed and the index) — no module-level RNG anywhere, so schedules are
+reproducible run to run.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass
+
+
+def _rng(seed: int, stream: int) -> random.Random:
+    # distinct, deterministic stream per producer/client
+    return random.Random((seed * 1_000_003 + stream) & 0x7FFFFFFF)
+
+
+@dataclass
+class OpenLoopLoadGen:
+    """Per-producer arrival schedules at a fixed mean period.
+
+    ``period_s`` is the mean inter-arrival time in MODEL seconds
+    (``frame_period / S`` for the accelerated FaceRec producer).
+    """
+    n_producers: int
+    period_s: float
+    process: str = "periodic"          # periodic | poisson
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.process not in ("periodic", "poisson"):
+            raise ValueError(f"unknown arrival process: {self.process}")
+
+    def schedule(self, producer: int, horizon_s: float) -> list[float]:
+        """Absolute arrival times in [0, horizon_s) for one producer.
+
+        Deterministic in (seed, producer): periodic producers get a
+        seeded phase offset (like the DES's randomized first tick),
+        Poisson producers exponential gaps.
+        """
+        rng = _rng(self.seed, producer)
+        out: list[float] = []
+        t = rng.random() * self.period_s
+        while t < horizon_s:
+            out.append(t)
+            if self.process == "periodic":
+                t += self.period_s
+            else:
+                t += rng.expovariate(1.0 / self.period_s)
+        return out
+
+    @property
+    def offered_rate(self) -> float:
+        """Aggregate arrivals/s (model time)."""
+        return self.n_producers / self.period_s
+
+
+@dataclass
+class ClosedLoopLoadGen:
+    """K clients, each: submit -> await completion -> think -> repeat.
+
+    ``think_s`` is the mean think time in model seconds (exponential
+    when ``process="poisson"``, fixed otherwise). Offered load adapts
+    to latency, so the cluster saturates instead of diverging.
+    """
+    n_clients: int
+    think_s: float = 0.0
+    process: str = "periodic"
+    seed: int = 0
+
+    def think_sampler(self, client: int):
+        """Seeded think-time sampler for one client."""
+        rng = _rng(self.seed, client)
+
+        def sample() -> float:
+            if self.think_s <= 0:
+                return 0.0
+            if self.process == "poisson":
+                return rng.expovariate(1.0 / self.think_s)
+            return self.think_s
+        return sample

@@ -1,0 +1,10 @@
+"""Cluster-namespace re-export of the shared tail-latency metrics.
+
+The implementations live in :mod:`repro.core.metrics` (pure stdlib) so
+the serving engine can share the LatencyStats/TailSLO vocabulary
+without importing the cluster runtime; cluster code and tests address
+them here.
+"""
+from repro.core.metrics import LatencyStats, SLOReport, TailSLO, percentile
+
+__all__ = ["LatencyStats", "SLOReport", "TailSLO", "percentile"]

@@ -107,14 +107,25 @@ class Batcher:
 
     # ---- pull interface ---------------------------------------------------
 
-    def next_batch(self) -> list | None:
-        """One batch, or None once the stop sentinel has been consumed."""
+    def next_batch(self, max_wait: float | None = None) -> list | None:
+        """One batch, or None once the stop sentinel has been consumed.
+
+        ``max_wait`` bounds the blocking wait for the batch's FIRST
+        item; when it expires with nothing queued the call returns an
+        empty list (distinct from the ``None`` end-of-stream signal).
+        Cluster replicas poll several partition queues from one thread,
+        so an idle partition must hand control back instead of parking
+        the consumer forever.
+        """
         if self.source is None:
             raise ValueError("pull interface needs a source queue; "
                              "this Batcher is push-fed")
         if self._stopped:
             return None
-        first = self.source.get()
+        try:
+            first = self.source.get(timeout=max_wait)
+        except queue.Empty:
+            return []
         if self.stop is not None and first is self.stop:
             self._stopped = True
             return None

@@ -48,6 +48,30 @@ class BrokerConfig:
         eff = self.drive_efficiency[min(d, len(self.drive_efficiency)) - 1]
         return d * self.drive_write_bw * eff
 
+    def write_time(self, nbytes: float) -> float:
+        """Seconds the leader's storage channel is busy for one record
+        (log payload + per-record overhead). Both the DES and the live
+        cluster pace writes with this, so their knees are comparable."""
+        return (nbytes + self.write_overhead_bytes) / self.storage_write_capacity
+
+    def leader_for(self, partition_index: int) -> int:
+        """Static round-robin partition->leader placement (how Topic
+        assigns leaders; exposed so live partitions match the model)."""
+        return partition_index % self.n_brokers
+
+    def scaled(self, eff: float) -> "BrokerConfig":
+        """A copy with per-broker bandwidths scaled by ``eff``.
+
+        Scale-model runs shrink producer counts by ``eff`` and broker
+        capacity together, preserving every utilization ratio (and thus
+        the stability knee) while cutting the event/thread count —
+        the same trick as ``ClusterSim``'s ``scale`` knob, lifted here
+        so the live cluster and the closed form share it.
+        """
+        from dataclasses import replace
+        return replace(self, drive_write_bw=self.drive_write_bw * eff,
+                       net_bw=self.net_bw * eff)
+
 
 @dataclass
 class Partition:

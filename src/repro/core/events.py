@@ -104,10 +104,19 @@ class EventLog:
                 for evs in spans.values() if evs]
 
     def tail(self, q: float = 0.99) -> float:
-        e2e = sorted(self.end_to_end())
-        if not e2e:
-            return 0.0
-        return e2e[min(len(e2e) - 1, int(math.ceil(q * len(e2e))) - 1)]
+        return self.percentiles((q,))[q]
+
+    def percentiles(self, qs=(0.5, 0.95, 0.99),
+                    stages: list[str] | None = None) -> dict[float, float]:
+        """Per-request e2e latency percentiles (tail-SLO quantities).
+
+        Delegates to :func:`repro.core.metrics.percentile` so EventLog
+        tails and LatencyStats can never drift onto different
+        conventions.
+        """
+        from repro.core.metrics import percentile
+        e2e = self.end_to_end(stages)
+        return {q: percentile(e2e, q) for q in qs}
 
     def mean_e2e(self) -> float:
         e2e = self.end_to_end()

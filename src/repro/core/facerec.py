@@ -312,6 +312,29 @@ class FusedIdentifier:
         return _regroup(self.identify_crops(crops), counts)
 
 
+def build_identify_stack(seed: int = 0, gallery_size: int = 8,
+                         fast_path: bool = True,
+                         ) -> tuple[Embedder, Classifier,
+                                    FusedIdentifier | None]:
+    """The identification stage's model stack, built once.
+
+    Shared by every deployment of the stage: ``StreamingPipeline``
+    constructs its identify workers from this, and ``repro.cluster``
+    replicas running in ``service="real"`` mode call the very same
+    factory — so a cluster replica IS the pipeline's identify stage,
+    not a reimplementation. The gallery is ``gallery_size`` synthetic
+    identities embedded at init (deterministic in ``seed``).
+    """
+    embedder = Embedder()
+    rng = np.random.default_rng(seed)
+    thumbs = rng.uniform(0, 255, (gallery_size, THUMB, THUMB, 3))
+    gallery_embs = embedder.embed_batch(thumbs.astype(np.float32))
+    classifier = Classifier(
+        {f"person_{i}": gallery_embs[i] for i in range(gallery_size)})
+    fused = FusedIdentifier(embedder, classifier) if fast_path else None
+    return embedder, classifier, fused
+
+
 def identify_fused_batch(frames: list[np.ndarray],
                          centers_per_frame: list[list[tuple[int, int]]],
                          embedder: Embedder, classifier: Classifier,

@@ -80,20 +80,15 @@ class StreamingPipeline:
         self.fast_path = fast_path
         self.video = VideoStream(seed=seed)
         self.log = EventLog()
-        self.embedder = facerec.Embedder()
-        rng = np.random.default_rng(seed)
-        thumbs = rng.uniform(
-            0, 255, (gallery_size, facerec.THUMB, facerec.THUMB, 3))
-        gallery_embs = self.embedder.embed_batch(thumbs.astype(np.float32))
-        self.classifier = facerec.Classifier(
-            {f"person_{i}": gallery_embs[i] for i in range(gallery_size)})
-        # device-resident identify: resize operator pre-composed with the
-        # embedder's first layer (see facerec.FusedIdentifier); with
-        # fast_path=False the identify loop runs the unfused
+        # the identify stage's model stack comes from the shared factory
+        # (cluster replicas build theirs from the same one): embedder,
+        # gallery classifier, and — with fast_path — the device-resident
+        # FusedIdentifier whose resize operator is pre-composed with the
+        # embedder's first layer; fast_path=False keeps the unfused
         # crop->resize->embed->host-classify chain for comparison
-        self.fused_identifier = (
-            facerec.FusedIdentifier(self.embedder, self.classifier)
-            if fast_path else None)
+        self.embedder, self.classifier, self.fused_identifier = \
+            facerec.build_identify_stack(seed=seed, gallery_size=gallery_size,
+                                         fast_path=fast_path)
         # broker topics (queues); maxsize models bounded broker capacity
         self.faces_topic: queue.Queue = queue.Queue(maxsize=4096)
         self.frames_topic: queue.Queue = queue.Queue(maxsize=1024)

@@ -30,7 +30,15 @@ class ResourceUtilization:
 
 
 def utilizations(wl: FaceRecWorkload, bk: BrokerConfig,
-                 speedup: float = 1.0) -> dict[str, ResourceUtilization]:
+                 speedup: float = 1.0,
+                 n_consumers: int | None = None) -> dict[str, ResourceUtilization]:
+    """Per-resource rho at acceleration ``speedup``.
+
+    ``n_consumers`` overrides the workload's consumer pool size — the
+    cluster uses it to price a deployment of N replica consumers
+    without forging a new workload object.
+    """
+    consumers = wl.n_consumers if n_consumers is None else n_consumers
     div = speedup if wl.accelerate_ingest else 1.0
     frame_rate = wl.n_producers / (wl.frame_period / div)
     if wl.batch_per_tick:
@@ -57,7 +65,7 @@ def utilizations(wl: FaceRecWorkload, bk: BrokerConfig,
             "producer_send", per_tick / period, 1.0),
         "consumers": ResourceUtilization(
             "consumers", face_rate * wl.t_identify / speedup,
-            float(wl.n_consumers)),
+            float(consumers)),
     }
 
 
@@ -69,6 +77,31 @@ def max_stable_speedup(wl: FaceRecWorkload, bk: BrokerConfig,
     for _ in range(40):
         mid = 0.5 * (lo + hi_)
         if utilizations(wl, bk, mid)[resource].stable:
+            lo = mid
+        else:
+            hi_ = mid
+    return lo
+
+
+def stability_knee(wl: FaceRecWorkload, bk: BrokerConfig,
+                   n_consumers: int | None = None,
+                   hi: float = 64.0) -> float:
+    """Largest S with EVERY resource's rho < 1 (bisection).
+
+    Unlike :func:`max_stable_speedup` (one named resource), this is the
+    whole-system destabilization point the DES and the live cluster
+    measure — the quantity the three models are cross-validated on.
+    """
+    def stable(s: float) -> bool:
+        return all(u.stable
+                   for u in utilizations(wl, bk, s, n_consumers).values())
+
+    lo, hi_ = 0.5, hi
+    if not stable(lo):
+        return lo
+    for _ in range(40):
+        mid = 0.5 * (lo + hi_)
+        if stable(mid):
             lo = mid
         else:
             hi_ = mid

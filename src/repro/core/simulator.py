@@ -115,6 +115,17 @@ class SimResult:
     consumer_net_util: float
     ingest_delay_mean: float = 0.0
     messages: int = 0
+    p50_latency: float = 0.0
+    p95_latency: float = 0.0
+    backlog: int = 0
+    unwritten: int = 0
+    # measured-only instability: queue growth / producer lag observed in
+    # THIS run, with no analytic-rho escape hatch. ``unstable`` keeps the
+    # rho short-circuit (short sims near the knee may end before a
+    # just-unstable queue visibly diverges); cross-validation against
+    # the closed form must use ``diverged`` or the agreement would be
+    # circular.
+    diverged: bool = False
 
     def to_dict(self):
         return dict(self.__dict__)
@@ -147,6 +158,7 @@ class ClusterSim:
         self.msgs: list[Message] = []
         self.ingest_delays: list[float] = []
         self._id = 0
+        self._published = 0     # messages handed to a write channel
 
     # ---- run ---------------------------------------------------------------
 
@@ -240,6 +252,7 @@ class ClusterSim:
                 # client send path (per-message cost), then linger, then
                 # the leader broker's storage write channel
                 t_sent = ch.submit_time(t_busy, wl.t_send, wl.face_bytes)
+                self._published += 1
                 msg = Message(key=rid, size=wl.face_bytes, t_produced=t_busy)
                 msg.t_published = t_sent + self.bk.linger_s
                 part = self.topic.pick_partition()
@@ -261,8 +274,23 @@ class ClusterSim:
         lat = sorted((wl.frame_period / div) + m.broker_wait
                      + wl.t_identify / S + d_mean for m in msgs)
         mean_lat = sum(lat) / len(lat) if lat else float("inf")
-        p99 = lat[min(len(lat) - 1, int(0.99 * len(lat)))] if lat else float("inf")
+
+        # shared nearest-rank convention (repro.core.metrics), so the
+        # DES and live-cluster tails overlay under one definition
+        from repro.core.metrics import percentile
+
+        def pct(q: float) -> float:
+            return percentile(lat, q) if lat else float("inf")
+
+        p50, p95, p99 = pct(0.50), pct(0.95), pct(0.99)
         backlog = sum(len(p.backlog) for p in self.topic.partitions)
+        # a saturated write channel accumulates its queue as deliveries
+        # scheduled past sim_time: published-but-never-written messages
+        # are backlog too, or storage saturation would be invisible to
+        # the measured signal (consumed + partition backlog both stall)
+        unwritten = self._published - len(self.msgs) - backlog
+        diverged = ((backlog + unwritten) > 0.08 * max(self._published, 1)
+                    or d_mean > 5 * wl.frame_period)
         # instability = measured divergence OR analytic rho >= 1 (a short
         # sim can end before a just-unstable queue visibly diverges)
         from repro.core.queueing import utilizations
@@ -291,7 +319,10 @@ class ClusterSim:
             broker_net_util=raw / (len(self.write_ch) * nic),
             producer_net_util=raw / (self.n_prod * nic),
             consumer_net_util=raw / (self.n_cons * nic),
-            ingest_delay_mean=d_mean, messages=len(msgs))
+            ingest_delay_mean=d_mean, messages=len(msgs),
+            p50_latency=(float("inf") if unstable else p50),
+            p95_latency=(float("inf") if unstable else p95),
+            backlog=backlog, unwritten=unwritten, diverged=diverged)
 
     def _drive_eff(self) -> float:
         d = self.bk.drives_per_broker

@@ -116,3 +116,47 @@ def paper_comparison(support_32x: bool = True) -> TCOComparison:
     return TCOComparison(
         homogeneous=homogeneous_design(drives_per_node=4 if support_32x else 1),
         purpose_built=purpose_built_design())
+
+
+def provision_drives(target_speedup: float,
+                     knee_by_drives: dict[int, float],
+                     tolerance: float = 0.0) -> int:
+    """Smallest drives/node whose MEASURED knee supports the target S.
+
+    ``knee_by_drives`` maps drive count -> destabilization S observed by
+    an executed run (DES sweep or the live cluster,
+    ``repro.cluster.crossval``) — not a paper constant. ``tolerance``
+    admits a knee within that relative margin below the target
+    (measured knees carry finite bisection resolution; the paper's
+    "4 drives supports 32x" sits exactly ON the modeled knee, so a
+    resolution-sized margin is part of reading the measurement).
+    Raises if no measured configuration reaches the target, rather
+    than silently under-provisioning.
+    """
+    floor = target_speedup * (1.0 - tolerance)
+    ok = [d for d, knee in sorted(knee_by_drives.items()) if knee >= floor]
+    if not ok:
+        raise ValueError(
+            f"no measured configuration sustains S={target_speedup}: "
+            f"{knee_by_drives}")
+    return ok[0]
+
+
+def measured_comparison(target_speedup: float,
+                        knee_by_drives: dict[int, float],
+                        n_nodes: int = 1024,
+                        tolerance: float = 0.0) -> TCOComparison:
+    """Tables 3/4 driven by executed measurements.
+
+    The homogeneous design's per-node drive count is chosen by
+    :func:`provision_drives` from measured knees instead of the paper's
+    "4 drives for 32x" constant; the purpose-built design already
+    carries 4 drives per broker node by construction. When the
+    measurements agree with the paper (they do — see
+    ``benchmarks/fig_cluster_scaling.py``) this reproduces
+    ``paper_comparison`` from first principles.
+    """
+    d = provision_drives(target_speedup, knee_by_drives, tolerance)
+    return TCOComparison(
+        homogeneous=homogeneous_design(n_nodes=n_nodes, drives_per_node=d),
+        purpose_built=purpose_built_design())

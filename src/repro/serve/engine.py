@@ -16,6 +16,7 @@ same ones the dry-run lowers for the production mesh.
 from __future__ import annotations
 
 import queue
+import threading
 import time
 from dataclasses import dataclass, field
 
@@ -26,6 +27,7 @@ import jax.numpy as jnp
 
 from repro.core.batching import Batcher
 from repro.core.events import EventLog
+from repro.core.metrics import LatencyStats, SLOReport, TailSLO
 
 
 @dataclass
@@ -41,12 +43,19 @@ class Request:
 class ServingEngine:
     def __init__(self, model, params, *, batch_slots: int = 4,
                  cache_len: int = 128, greedy: bool = True,
-                 fast_path: bool = True):
+                 fast_path: bool = True, max_queue: int | None = None):
         self.model = model
         self.params = params
         self.slots = batch_slots
         self.cache_len = cache_len
         self.log = EventLog()
+        # admission bound: submissions beyond max_queue pending requests
+        # are rejected at the door (logged as zero-span "reject" events,
+        # so ai_tax()/latency_report() see the shed load); None = accept
+        # everything and let queue wait absorb the pressure
+        self.max_queue = max_queue
+        self.rejected = 0
+        self._admit_lock = threading.Lock()   # atomic check-then-put
         # admission shares the streaming pipeline's Batcher: submissions
         # land on a topic-like queue and are drained non-blocking into
         # whatever slots are free each scheduler step
@@ -68,9 +77,21 @@ class ServingEngine:
         else:
             self._decode = jax.jit(model.decode_step)
 
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> bool:
+        """Queue a request; False when admission control sheds it."""
         req.t_submit = time.perf_counter()
-        self._pending.put(req)
+        with self._admit_lock:
+            if (self.max_queue is not None
+                    and self._pending.qsize() >= self.max_queue):
+                self.rejected += 1
+                reject = True
+            else:
+                self._pending.put(req)
+                reject = False
+        if reject:
+            self.log.log(req.rid, "reject", req.t_submit, req.t_submit,
+                         int(req.prompt.nbytes))
+        return not reject
 
     @property
     def queue_depth(self) -> int:
@@ -150,3 +171,20 @@ class ServingEngine:
 
     def tax_report(self) -> dict:
         return self.log.ai_tax(ai_stages={"prefill", "decode"})
+
+    def latency_report(self, slo: TailSLO | None = None,
+                       ) -> tuple[LatencyStats, SLOReport | None]:
+        """Per-request e2e (submit -> last decode) tail percentiles.
+
+        Same LatencyStats/TailSLO machinery as the serving cluster, so
+        a single engine and an N-replica deployment report their tails
+        in the same vocabulary. Rejected requests count toward the SLO
+        drop-fraction bound, not the latency distribution.
+        """
+        e2e = self.log.end_to_end(
+            stages=["wait", "prefill", "decode"])
+        stats = LatencyStats.from_samples(e2e)
+        offered = stats.n + self.rejected
+        drop_fraction = self.rejected / offered if offered else 0.0
+        return stats, (slo.check(stats, drop_fraction)
+                       if slo is not None else None)

@@ -1,0 +1,59 @@
+"""Shared computation behind the DES golden regression fixtures.
+
+One function produces every paper-validated quantity the fixtures pin
+(Fig 10/11 seeded DES sweeps, Fig 15 closed-form unlock points), used
+by BOTH ``scripts/gen_des_golden.py`` (writes the fixture) and
+``tests/test_des_golden.py`` (asserts current outputs still match) —
+so the two can never drift apart.
+
+The DES is deterministic given a seed (one ``random.Random`` threaded
+through ``ClusterSim``), so tolerances are tight: refactors that
+change scheduling order or float summation order are *supposed* to
+trip these tests and force a deliberate fixture regeneration
+(``make des-golden``).
+"""
+from __future__ import annotations
+
+from repro.core.broker import BrokerConfig
+from repro.core.queueing import max_stable_speedup
+from repro.core.simulator import ClusterSim, FaceRecWorkload
+
+REL_TOL = 1e-7      # DES floats: deterministic modulo FP refactors
+ABS_TOL = 1e-12
+
+_SIM_KW = dict(scale=0.04, sim_time=20, warmup=5, seed=0)
+
+
+def compute_goldens() -> dict:
+    out: dict = {"sim_kw": dict(_SIM_KW), "fig10_11": {}, "fig15": {}}
+    wl, bk = FaceRecWorkload(), BrokerConfig()
+    for s in (1, 2, 4, 6, 8):
+        r = ClusterSim(wl, bk, speedup=s, **_SIM_KW).run()
+        entry = {
+            "unstable": r.unstable,
+            "diverged": r.diverged,
+            "throughput": r.throughput,
+            "waiting_mean": r.waiting_mean,
+            "broker_write_util": r.broker_write_util,
+            "broker_net_util": r.broker_net_util,
+            "messages": r.messages,
+            "backlog": r.backlog,
+            "unwritten": r.unwritten,
+        }
+        if not r.unstable:      # inf latencies aren't JSON-comparable
+            entry.update(mean_latency=r.mean_latency,
+                         p50_latency=r.p50_latency,
+                         p95_latency=r.p95_latency,
+                         p99_latency=r.p99_latency,
+                         waiting_share=r.waiting_share)
+        out["fig10_11"][f"S{s}"] = entry
+    for d in (1, 2, 3, 4):
+        out["fig15"][f"drives{d}"] = max_stable_speedup(
+            wl, BrokerConfig(drives_per_broker=d))
+    for n in (3, 4, 6, 8):
+        out["fig15"][f"brokers{n}"] = max_stable_speedup(
+            wl, BrokerConfig(n_brokers=n))
+    for frac in (1.0, 0.5, 0.25):
+        out["fig15"][f"face_x{frac}"] = max_stable_speedup(
+            FaceRecWorkload(face_bytes=37_300 * frac), bk)
+    return out

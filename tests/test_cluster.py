@@ -1,0 +1,265 @@
+"""Multi-replica serving cluster: scheduler, load generators, admission,
+tail-latency SLOs — and the acceptance gate: live cluster, DES, and
+closed-form queueing agree on the destabilizing acceleration S.
+"""
+from dataclasses import replace
+
+import pytest
+
+from repro.cluster import (
+    ClusterSpec, ConsumerGroup, OpenLoopLoadGen, ServingCluster, TailSLO,
+)
+from repro.cluster.crossval import DES_TOL, LIVE_TOL, des_knee, live_knee
+from repro.cluster.metrics import LatencyStats, percentile
+from repro.core.broker import BrokerConfig
+from repro.core.simulator import FaceRecWorkload
+
+
+# ---- consumer-group scheduler ----------------------------------------------
+
+def test_assignment_partitions_disjoint_and_complete():
+    g = ConsumerGroup(n_partitions=13)
+    for m in ("a", "b", "c", "d", "e"):
+        g.join(m)
+        table = g.table()
+        owned = [p for parts in table.values() for p in parts]
+        # max one consumer per partition, nothing orphaned
+        assert sorted(owned) == list(range(13))
+        assert len(owned) == len(set(owned))
+    # near-even spread
+    sizes = [len(p) for p in g.table().values()]
+    assert max(sizes) - min(sizes) <= 1
+
+
+def test_rebalance_on_join_and_leave_bumps_generation():
+    g = ConsumerGroup(n_partitions=4)
+    a0 = g.join("a")
+    assert a0.partitions == (0, 1, 2, 3)
+    gen0 = g.generation
+    g.join("b")
+    assert g.generation > gen0
+    assert len(g.assignment("a").partitions) == 2
+    g.leave("a")
+    assert g.assignment("b").partitions == (0, 1, 2, 3)
+    assert g.assignment("a").partitions == ()
+    assert g.owner_of(2) == "b"
+
+
+# ---- load generators --------------------------------------------------------
+
+def test_open_loop_schedule_deterministic_and_rate_matched():
+    a = OpenLoopLoadGen(4, period_s=0.05, process="poisson", seed=3)
+    b = OpenLoopLoadGen(4, period_s=0.05, process="poisson", seed=3)
+    c = OpenLoopLoadGen(4, period_s=0.05, process="poisson", seed=4)
+    assert a.schedule(0, 10.0) == b.schedule(0, 10.0)     # seeded: identical
+    assert a.schedule(0, 10.0) != c.schedule(0, 10.0)     # seed-sensitive
+    assert a.schedule(0, 10.0) != a.schedule(1, 10.0)     # per-producer streams
+    n = len(a.schedule(0, 10.0))
+    assert 10.0 / 0.05 * 0.6 < n < 10.0 / 0.05 * 1.4      # ~rate-matched
+    periodic = OpenLoopLoadGen(1, period_s=0.1, seed=0).schedule(0, 1.0)
+    gaps = [b_ - a_ for a_, b_ in zip(periodic, periodic[1:])]
+    assert all(abs(gap - 0.1) < 1e-9 for gap in gaps)
+
+
+def test_metrics_percentiles():
+    xs = [float(i) for i in range(1, 101)]
+    assert percentile(xs, 0.50) == 50.0
+    assert percentile(xs, 0.99) == 99.0
+    st = LatencyStats.from_samples(xs)
+    assert st.n == 100 and st.p50 == 50.0 and st.max == 100.0
+    # EventLog speaks the same nearest-rank convention
+    from repro.core.events import EventLog
+    log = EventLog()
+    for rid, dur in enumerate(xs):
+        log.log(rid, "stage", 0.0, dur)
+    ps = log.percentiles((0.5, 0.99))
+    assert ps[0.5] == 50.0 and ps[0.99] == log.tail(0.99) == 99.0
+
+
+# ---- live cluster runs ------------------------------------------------------
+
+def _small_spec(**kw):
+    kw.setdefault("sim_time", 3.0)
+    kw.setdefault("warmup", 1.0)
+    kw.setdefault("speedup", 4.0)
+    return ClusterSpec(**kw)
+
+
+def test_cluster_stable_run_completes_and_reports():
+    slo = TailSLO(p99_s=3.0, max_drop_fraction=0.0)
+    res = ServingCluster(_small_spec(), slo=slo).run()
+    assert res.produced > 100
+    assert res.completed > 0.8 * res.produced
+    assert not res.diverged
+    assert res.latency.p50 <= res.latency.p95 <= res.latency.p99
+    assert res.slo.ok, res.slo.violations
+    # wait + identify flow through the same EventLog accounting as the
+    # single-replica pipeline
+    tax = res.ai_tax()
+    assert 0.0 < tax["ai_fraction"] < 1.0
+    assert "wait" in tax["per_stage"]
+    # measured broker utilization tracks the closed-form rho
+    rho = res.predicted_rho["broker_storage_write"]
+    assert abs(res.utilization["broker_storage_write"] - rho) < 0.25 * rho + 0.05
+
+
+def test_cluster_rebalances_on_replica_add_remove():
+    spec = _small_spec(n_replicas=2, n_partitions=4, n_producers=1,
+                       fetch_max_wait_s=0.05)
+    cl = ServingCluster(spec)
+    cl.start()
+    base = cl.group.rebalances
+    name = cl.add_replica()
+    assert cl.group.rebalances > base
+    assert len(cl.group.assignment(name).partitions) >= 1
+    cl.remove_replica(name)
+    assert cl.group.assignment(name).partitions == ()
+    # surviving replicas own everything again
+    owned = sorted(p for parts in cl.group.table().values() for p in parts)
+    assert owned == list(range(4))
+    for t in cl._feeder_threads:
+        t.join()
+    for t in cl._replica_threads:
+        t.join()
+    cl.topic.join()
+    res = cl._result()
+    assert res.completed > 0.8 * res.produced
+    assert not res.diverged
+
+
+def test_admission_drop_policy_sheds_load_and_logs_rejects():
+    # consumer-starved on purpose: 1 slow replica, tiny in-flight bound
+    spec = _small_spec(n_replicas=1, speedup=0.35, admission="drop",
+                       partition_capacity=4, fetch_max_wait_s=0.05)
+    res = ServingCluster(spec).run()
+    assert res.dropped > 0
+    assert res.drop_fraction > 0.05
+    rejects = [e for e in res.log.events if e.stage == "reject"]
+    assert len(rejects) == res.dropped
+    # admitted traffic stays bounded: backlog can't exceed the bound
+    assert res.backlog <= spec.partition_capacity * spec.partitions + 8
+    slo = TailSLO(max_drop_fraction=0.01).check(res.latency,
+                                                res.drop_fraction)
+    assert not slo.ok
+
+
+def test_admission_block_policy_bounds_inflight_via_backpressure():
+    # same starved shape as the drop test, but blocking: nothing is
+    # shed, the bound holds exactly, pressure surfaces as producer lag
+    spec = _small_spec(n_replicas=1, speedup=0.5, admission="block",
+                       partition_capacity=6, fetch_max_wait_s=0.05)
+    res = ServingCluster(spec).run()
+    assert res.dropped == 0
+    assert res.backlog <= spec.partition_capacity
+    assert res.producer_lag_mean > spec.period_s
+
+
+def test_closed_loop_saturates_instead_of_diverging():
+    # far beyond the open-loop knee: closed loop self-throttles
+    spec = _small_spec(loop="closed", n_clients=6, speedup=16.0,
+                      fetch_max_wait_s=0.02)
+    res = ServingCluster(spec).run()
+    assert not res.diverged
+    assert res.completed > 0.9 * res.produced
+    # population bound: never more in flight than clients
+    assert res.backlog <= spec.n_clients
+
+
+@pytest.mark.slow
+def test_real_service_mode_runs_the_pipeline_identify_stage():
+    """service="real": replicas serve actual crops through the SAME
+    facerec.build_identify_stack device program as StreamingPipeline
+    (jit buckets pre-warmed so compiles don't read as divergence)."""
+    spec = _small_spec(service="real", n_replicas=2, n_producers=1,
+                       fetch_max_wait_s=0.05)
+    res = ServingCluster(spec).run()
+    assert res.completed > 0.8 * res.produced
+    assert not res.diverged
+    tax = res.ai_tax()
+    assert 0.0 < tax["ai_fraction"] < 1.0
+
+
+# ---- the acceptance gate: measured vs modeled knee --------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("drives,replicas", [(1, 8), (2, 10)])
+def test_knee_agreement_live_des_closed_form(drives, replicas):
+    """Live cluster, DES, and closed form locate the same destabilizing
+    S (documented tolerances: DES_TOL/LIVE_TOL in repro.cluster.crossval)
+    for two (replicas, drives) configurations."""
+    spec = ClusterSpec(bk=BrokerConfig(drives_per_broker=drives),
+                       n_replicas=replicas, sim_time=6.0, warmup=1.5)
+    closed = spec.closed_form_knee()
+    des = des_knee(spec, iters=5)
+    assert abs(des - closed) / closed <= DES_TOL, (des, closed)
+    live = live_knee(spec, iters=3)
+    if abs(live - closed) / closed > LIVE_TOL:
+        # the live knee rides a real clock: one retry guards against a
+        # transiently loaded box (persistent disagreement still fails)
+        live = live_knee(spec, iters=3)
+    assert abs(live - closed) / closed <= LIVE_TOL, (live, closed)
+
+
+@pytest.mark.slow
+def test_live_cluster_brackets_the_closed_form_knee():
+    """Direct bracket (no bisection): clearly below the analytic knee
+    the live cluster is stable, clearly above it diverges."""
+    spec = ClusterSpec(sim_time=5.0, warmup=1.5)
+    knee = spec.closed_form_knee()
+    stable = ServingCluster(replace(spec, speedup=0.65 * knee)).run()
+    assert not stable.diverged, stable.inflight_growth
+    sat = ServingCluster(replace(spec, speedup=1.4 * knee)).run()
+    assert sat.diverged
+    # and the saturated run's tail is visibly worse
+    assert sat.latency.p99 > 2 * stable.latency.p99
+
+
+# ---- provisioning from measurements ----------------------------------------
+
+@pytest.mark.slow
+def test_measured_knees_reproduce_paper_provisioning():
+    """DES-measured knees drive the Tables 3/4 provisioning choice to
+    the same design the paper reached (4 drives for 32x)."""
+    from repro.core import tco
+    knees = {}
+    for d in (3, 4):
+        spec = ClusterSpec(bk=BrokerConfig(drives_per_broker=d))
+        knees[d] = des_knee(spec, iters=5)
+    d = tco.provision_drives(32.0, knees, tolerance=0.05)
+    assert d == 4
+    comp = tco.measured_comparison(32.0, knees, tolerance=0.05)
+    paper = tco.paper_comparison(support_32x=True)
+    assert (comp.homogeneous.equipment_cost
+            == paper.homogeneous.equipment_cost)
+    assert comp.saving_fraction >= 0.15
+
+
+# ---- determinism ------------------------------------------------------------
+
+def test_des_repeat_run_determinism():
+    """Same seed -> bit-identical SimResult; the RNG is threaded through
+    ClusterSim (no module-level randomness anywhere on the sim path)."""
+    from repro.core.simulator import ClusterSim
+
+    def once(seed):
+        wl = FaceRecWorkload(face_dist="empirical", faces_per_frame=0.64)
+        return ClusterSim(wl, BrokerConfig(), speedup=4.0, scale=0.02,
+                          sim_time=10, warmup=2, seed=seed).run()
+
+    a, b, c = once(7), once(7), once(8)
+    assert a.to_dict() == b.to_dict()
+    assert c.to_dict() != a.to_dict()     # seed actually flows
+
+
+def test_batcher_bounded_first_wait():
+    """Batcher.next_batch(max_wait=...) hands control back on an idle
+    queue (empty list) instead of parking the consumer forever."""
+    import queue
+
+    from repro.core.batching import Batcher
+    q: queue.Queue = queue.Queue()
+    b = Batcher(q, batch_size=4, timeout_s=0.01, stop=None)
+    assert b.next_batch(max_wait=0.01) == []
+    q.put(1)
+    q.put(2)
+    assert b.next_batch(max_wait=0.01) == [1, 2]

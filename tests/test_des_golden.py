@@ -1,0 +1,65 @@
+"""Golden regression gate for the DES (paper Figs 10/11/15 quantities).
+
+The committed fixture pins seeded ``FaceRecWorkload`` runs and the
+closed-form unlock points, so cluster refactors can't silently shift
+paper-validated numbers. A legitimate simulator change regenerates the
+fixture with ``make des-golden`` — a diff there is a reviewable event.
+"""
+import json
+import math
+import pathlib
+
+import pytest
+
+from golden_des import ABS_TOL, REL_TOL, compute_goldens
+
+FIXTURE = pathlib.Path(__file__).parent / "fixtures" / "des_golden.json"
+
+
+@pytest.fixture(scope="module")
+def golden():
+    return json.loads(FIXTURE.read_text())
+
+
+@pytest.fixture(scope="module")
+def current():
+    return compute_goldens()
+
+
+def _assert_close(path: str, want, got):
+    if isinstance(want, float):
+        assert math.isclose(got, want, rel_tol=REL_TOL, abs_tol=ABS_TOL), \
+            f"{path}: fixture={want!r} current={got!r}"
+    else:
+        assert got == want, f"{path}: fixture={want!r} current={got!r}"
+
+
+def test_fixture_exists_and_covers_the_sweep(golden):
+    assert set(golden["fig10_11"]) == {"S1", "S2", "S4", "S6", "S8"}
+    assert len(golden["fig15"]) == 11
+
+
+def test_fig10_11_des_quantities_match_fixture(golden, current):
+    for s_key, want in golden["fig10_11"].items():
+        got = current["fig10_11"][s_key]
+        assert set(got) == set(want), s_key
+        for field, value in want.items():
+            _assert_close(f"fig10_11.{s_key}.{field}", value, got[field])
+
+
+def test_fig15_unlock_points_match_fixture(golden, current):
+    for cfg, want in golden["fig15"].items():
+        _assert_close(f"fig15.{cfg}", want, current["fig15"][cfg])
+
+
+def test_fixture_pins_the_paper_claims(golden):
+    """The fixture itself must keep encoding the paper's headline
+    numbers — a regeneration that drifts away from them is wrong even
+    if internally consistent."""
+    f = golden["fig10_11"]
+    assert not f["S6"]["unstable"] and f["S8"]["unstable"]
+    assert 0.07 <= f["S1"]["broker_write_util"] <= 0.13    # paper: ~10%
+    assert f["S8"]["broker_net_util"] < 0.10               # Fig 11a
+    g = golden["fig15"]
+    assert g["drives1"] < 8.0 <= g["drives2"]
+    assert g["drives4"] >= 32.0                            # paper: 32x @ 4

@@ -1,0 +1,84 @@
+"""Property-based tests for the closed-form queueing model (§5.3-5.4).
+
+Three families of invariants, run under hypothesis when available and
+its deterministic single-example fallback otherwise:
+  * every resource's rho is monotone non-decreasing in the acceleration
+    factor S (accelerating AI never relieves infrastructure pressure);
+  * stability is monotone in provisioning — more drives or more brokers
+    never lowers the destabilization knee;
+  * the closed-form instability point brackets the DES's measured queue
+    blow-up (stable comfortably below it, diverging comfortably above).
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:      # deterministic single-example shim
+    from hypothesis_fallback import given, settings, st
+
+from repro.core.broker import BrokerConfig
+from repro.core.queueing import (
+    max_stable_speedup, stability_knee, utilizations,
+)
+from repro.core.simulator import (
+    ClusterSim, FaceRecWorkload, object_detection_workload,
+)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(1.0, 32.0), st.floats(1.25, 1.9), st.booleans())
+def test_rho_monotone_nondecreasing_in_speedup(s, factor, objdet):
+    """Accelerating AI can only raise (never lower) any resource's rho."""
+    wl = object_detection_workload() if objdet else FaceRecWorkload()
+    lo = utilizations(wl, BrokerConfig(), s)
+    hi = utilizations(wl, BrokerConfig(), s * factor)
+    for name in lo:
+        assert hi[name].rho >= lo[name].rho - 1e-12, name
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 3), st.integers(3, 7))
+def test_stability_monotone_in_drives_and_brokers(drives, brokers):
+    """More provisioning never destabilizes: the knee is monotone
+    non-decreasing in drives per broker and in broker count."""
+    wl = FaceRecWorkload()
+    k_d = stability_knee(wl, BrokerConfig(drives_per_broker=drives))
+    k_d1 = stability_knee(wl, BrokerConfig(drives_per_broker=drives + 1))
+    assert k_d1 >= k_d - 1e-9
+    k_b = stability_knee(wl, BrokerConfig(n_brokers=brokers))
+    k_b1 = stability_knee(wl, BrokerConfig(n_brokers=brokers + 1))
+    assert k_b1 >= k_b - 1e-9
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(1, 2), st.sampled_from([0.7, 1.3]))
+def test_closed_form_knee_brackets_des_blowup(drives, factor):
+    """The analytic instability point brackets the DES's measured queue
+    blow-up: runs at 0.7x the knee stay stable, runs at 1.3x diverge
+    (the same measured-only signal the cluster cross-validation uses)."""
+    wl, bk = FaceRecWorkload(), BrokerConfig(drives_per_broker=drives)
+    knee = stability_knee(wl, bk)
+    r = ClusterSim(wl, bk, speedup=factor * knee, scale=0.015,
+                   sim_time=14, warmup=3, seed=1).run()
+    assert r.diverged == (factor > 1.0), (factor, knee, r.backlog,
+                                          r.unwritten)
+
+
+def test_stability_knee_matches_single_resource_bisection():
+    """With storage as the binding resource, the whole-system knee
+    coincides with the storage-only max_stable_speedup."""
+    wl, bk = FaceRecWorkload(), BrokerConfig()
+    assert stability_knee(wl, bk) == pytest.approx(
+        max_stable_speedup(wl, bk, "broker_storage_write"), rel=1e-3)
+
+
+def test_consumer_capacity_override_prices_replicas():
+    """utilizations(n_consumers=R) prices an R-replica deployment: the
+    consumer rho scales as 1/R and, for the accelerated FaceRec shape,
+    is flat in S (demand and service rate both scale with S)."""
+    wl, bk = FaceRecWorkload(), BrokerConfig()
+    r8 = utilizations(wl, bk, 4.0, n_consumers=8)["consumers"]
+    r16 = utilizations(wl, bk, 4.0, n_consumers=16)["consumers"]
+    assert r8.rho == pytest.approx(2 * r16.rho)
+    again = utilizations(wl, bk, 9.0, n_consumers=8)["consumers"]
+    assert again.rho == pytest.approx(r8.rho)
