@@ -11,7 +11,15 @@
 #   make cluster-smoke - CI-sized measured-vs-modeled cluster overlay
 #   make calibrate   - cost model vs XLA cost_analysis() on the fixture
 #                      battery (gates dot-FLOP agreement at 5%)
-#   make docs-lint   - docs exist and the figure map covers every bench
+#   make docs-check  - docs lint + figure-registry sync: required docs
+#                      exist, intra-repo links resolve, figure map AND
+#                      benchmarks/run.py MODULES cover every benchmark,
+#                      public src/repro modules carry docstrings
+#                      (docs-lint is an alias)
+#   make preprocess-smoke - acceleration x placement sweep over the
+#                      preprocess subsystem with its three assertions
+#                      (host fraction grows, device >=2x cheaper at the
+#                      top, host/device NMS bit-identical)
 #   make des-golden  - regenerate tests/fixtures/des_golden.json (ONLY
 #                      after a deliberate simulator change; the fixture
 #                      exists so refactors can't shift Fig 10/11/15
@@ -21,8 +29,9 @@
 #                      hot-path shape battery
 #   make autotune-check - assert the committed cache is in sync with
 #                      what the sweep produces (CI runs this)
-.PHONY: test coverage bench-smoke cluster-smoke calibrate docs-lint \
-	des-golden autotune autotune-check check
+.PHONY: test coverage bench-smoke cluster-smoke preprocess-smoke \
+	calibrate docs-lint docs-check des-golden autotune autotune-check \
+	check
 
 PY := PYTHONPATH=src python
 
@@ -50,14 +59,19 @@ bench-smoke:
 cluster-smoke:
 	$(PY) -m benchmarks.fig_cluster_scaling --smoke
 
+preprocess-smoke:
+	$(PY) -m benchmarks.fig_preprocess_offload --smoke
+
 des-golden:
 	$(PY) scripts/gen_des_golden.py
 
 calibrate:
 	$(PY) scripts/calibrate_cost.py
 
-docs-lint:
+docs-check:
 	$(PY) scripts/docs_lint.py
+
+docs-lint: docs-check
 
 autotune:
 	$(PY) scripts/autotune.py
@@ -65,4 +79,4 @@ autotune:
 autotune-check:
 	$(PY) scripts/autotune.py --check
 
-check: test bench-smoke docs-lint autotune-check
+check: test bench-smoke preprocess-smoke docs-check autotune-check

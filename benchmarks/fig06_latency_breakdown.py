@@ -1,14 +1,23 @@
 """Paper Fig 6: end-to-end frame latency breakdown (real video stats:
 0.64 faces/frame, spiky). Paper: ingestion 18.8ms, detection 74.8ms,
-broker wait 126.1ms (>33%), identification 131.5ms; e2e 351ms."""
+broker wait 126.1ms (>33%), identification 131.5ms; e2e 351ms.
+
+Stage rows are sourced from the measured event log through the shared
+five-way attribution (``repro.core.events.five_way_fractions`` +
+``facerec.stage_category``) — the same machinery the live pipeline and
+``TaxedStep`` report through — so this figure can never drift from the
+stages the system actually executes. Paper milliseconds are attached
+where the paper states them."""
 from __future__ import annotations
 
 from benchmarks.common import row, timed
+from repro.core import facerec
 from repro.core.broker import BrokerConfig
+from repro.core.events import FIVE_WAY, five_way_fractions
 from repro.core.simulator import ClusterSim, FaceRecWorkload
 
-PAPER = {"ingest": 0.0188, "detect": 0.0748, "wait": 0.1261,
-         "identify": 0.1315}
+PAPER_MS = {"ingest": 18.8, "detect": 74.8, "wait": 126.1,
+            "identify": 131.5}
 
 
 def run() -> list[str]:
@@ -17,11 +26,17 @@ def run() -> list[str]:
                      sim_time=25, warmup=6)
     res, us = timed(sim.run)
     bd = res.stage_means
+    cat = {s: facerec.stage_category(s) for s in bd}
+    order = {c: i for i, c in enumerate(FIVE_WAY)}
     out = []
-    for stage in ("ingest", "detect", "wait", "identify"):
-        ours = bd.get(stage, 0.0)
-        out.append(row(f"fig06/{stage}", us,
-                       f"ours_ms={ours*1e3:.1f};paper_ms={PAPER[stage]*1e3:.1f}"))
+    for stage in sorted(bd, key=lambda s: (order[cat[s]], s)):
+        derived = f"ours_ms={bd[stage]*1e3:.1f};cat={cat[stage]}"
+        if stage in PAPER_MS:
+            derived += f";paper_ms={PAPER_MS[stage]:.1f}"
+        out.append(row(f"fig06/{stage}", us, derived))
+    fr = five_way_fractions(bd, facerec.stage_category)
+    out.append(row("fig06/fractions", us,
+                   ";".join(f"{c}={fr[c]:.3f}" for c in FIVE_WAY)))
     e2e = res.mean_latency
     out.append(row("fig06/e2e", us,
                    f"ours_ms={e2e*1e3:.1f};paper_ms=351;"

@@ -2,11 +2,18 @@
 
 Two substrates: (a) the paper's measured fractions (encoded constants the
 Amdahl analysis runs on), (b) the LIVE pipeline on this container,
-measured with the same event instrumentation."""
+measured with the same event instrumentation. The live rows come from
+the shared five-way attribution (``ai_tax(category_of=...)`` — the
+``TaxedStep`` discipline), not a hard-coded stage list: every stage the
+pipeline logs is printed with its {pre, ai, post, transfer, queue}
+bucket, and the bucket fractions (which sum to 1) sit next to the
+paper's AI-vs-tax split."""
 from __future__ import annotations
 
 from benchmarks.common import row, timed
 from repro.core import acceleration as acc
+from repro.core import facerec
+from repro.core.events import FIVE_WAY
 from repro.core.pipeline import StreamingPipeline
 
 
@@ -25,8 +32,13 @@ def run() -> list[str]:
     out.append(row("fig08/live_pipeline_ai_fraction", us,
                    f"ai={tax['ai_fraction']:.2f};tax={tax['tax_fraction']:.2f};"
                    f"recall={res.recall:.2f}"))
+    fr = tax["fractions"]
+    out.append(row("fig08/live_five_way", us,
+                   ";".join(f"{c}={fr[c]:.3f}" for c in FIVE_WAY)))
     for stage, v in sorted(tax["per_stage"].items()):
-        out.append(row(f"fig08/live_{stage}", us, f"mean_ms={v*1e3:.2f}"))
+        out.append(row(f"fig08/live_{stage}", us,
+                       f"mean_ms={v*1e3:.2f};"
+                       f"cat={facerec.stage_category(stage)}"))
     return out
 
 

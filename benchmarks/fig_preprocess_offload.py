@@ -1,0 +1,154 @@
+"""Pre/post-processing tax under acceleration × placement (Figs 6/8,
+measured).
+
+The paper's core finding from executed runs: accelerate only the AI and
+the pre/post-processing around it — decode, letterbox resize/normalize,
+NMS — takes over end-to-end latency. The sweep applies the paper's §5.2
+emulation to spans measured on THIS container through the preprocess
+subsystem's own event accounting:
+
+  * ``placement="host"``   — pre/post stays on the CPU, so its time is
+    invariant while the AI span divides by S: the pre+post fraction
+    must grow strictly with S (asserted);
+  * ``placement="device"`` — the same math runs as jitted
+    (Pallas-backed) device programs, riding the accelerator: pre/post
+    divides by S too, and at the top of the sweep its total time must
+    be at least 2x below the host placement's (asserted).
+
+A third assertion pins the correctness story: host and device NMS make
+bit-identical keep decisions on a randomized battery — offloading the
+post-processing changes WHERE it runs, never WHAT it decides.
+
+``--smoke`` shrinks the measured frame battery for CI; the sweep and
+all three assertions are identical.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import row, timed
+from repro.core import facerec
+from repro.core.events import EventLog
+from repro.data.video import VideoStream
+from repro.preprocess import PreprocessStage
+from repro.preprocess import device as pre_device
+from repro.preprocess import host as pre_host
+
+SWEEP = (1.0, 2.0, 4.0, 8.0)
+
+
+def _measured_pass(placement: str, yuv: np.ndarray, shape,
+                   ) -> dict[str, float]:
+    """One ingest -> detect -> NMS pass; per-category busy seconds."""
+    import jax.numpy as jnp
+    H, W = shape
+    log = EventLog()
+    stage = PreprocessStage(placement, log=log)
+    B = len(yuv)
+    rids = list(range(B))
+    small = stage.ingest(yuv, H // 2, W // 2, rids=rids)
+    small = np.clip(small, 0, 255).astype(np.uint8)
+    t0 = time.perf_counter()
+    hms = np.asarray(facerec.detect_heatmap_batch(
+        jnp.asarray(facerec._pad_rows_pow2(small))))[:B]
+    t1 = time.perf_counter()
+    log.log_batch_span(rids, "detect", t0, t1,
+                       payload_bytes=small[0].nbytes)
+    stage.postprocess(hms, facerec.DETECT_POOL, rids=rids)
+    return log.five_way_seconds(facerec.stage_category)
+
+
+def _nms_battery(n_cases: int, seed: int = 7) -> int:
+    """Bit-identical host/device NMS decisions; returns the case count."""
+    rng = np.random.default_rng(seed)
+    for case in range(n_cases):
+        n = int(rng.integers(1, 48))
+        cy, cx = rng.uniform(0, 40, n), rng.uniform(0, 40, n)
+        h, w = rng.uniform(1, 8, n), rng.uniform(1, 8, n)
+        boxes = np.stack([cy - h, cx - w, cy + h, cx + w], 1) \
+            .astype(np.float32)
+        scores = rng.uniform(0, 100, n).astype(np.float32)
+        kw = dict(iou_thresh=float(rng.uniform(0.1, 0.6)),
+                  score_thresh=float(rng.uniform(0, 40)), max_out=12)
+        got_h = pre_host.nms(boxes, scores, **kw)
+        got_d = pre_device.nms(boxes, scores, **kw)
+        assert got_h == got_d, \
+            f"host/device NMS diverged on case {case}: {got_h} vs {got_d}"
+    return n_cases
+
+
+def run(smoke: bool = False) -> list[str]:
+    n_frames = 12 if smoke else 48
+    vs = VideoStream(seed=0)
+    frames = [vs.next_frame().pixels for _ in range(n_frames)]
+    yuv = np.stack([pre_host.rgb_to_yuv(f) for f in frames])
+    shape = frames[0].shape[:2]
+
+    out = []
+    measured = {}
+    for placement in ("host", "device"):
+        # warm pass at the full battery size: jit compiles (batch
+        # buckets are shape-keyed) and allocator effects out of the
+        # clock, so host and device spans are steady-state comparable
+        _measured_pass(placement, yuv, shape)
+        sec, us = timed(_measured_pass, placement, yuv, shape)
+        measured[placement] = sec
+        out.append(row(
+            f"figpre/measured_{placement}", us,
+            f"pre_ms={sec['pre']*1e3:.2f};ai_ms={sec['ai']*1e3:.2f};"
+            f"post_ms={sec['post']*1e3:.2f};n_frames={n_frames}"))
+
+    # the paper's §5.2 emulation on the measured spans: AI divides by S
+    # everywhere; pre/post divides only under device placement (it now
+    # rides the accelerator), and stays put on the host
+    host_fracs = []
+    for S in SWEEP:
+        for placement in ("host", "device"):
+            sec = measured[placement]
+            prepost = (sec["pre"] + sec["post"]) \
+                / (S if placement == "device" else 1.0)
+            ai = sec["ai"] / S
+            total = prepost + ai + sec["transfer"] + sec["queue"]
+            frac = prepost / total
+            if placement == "host":
+                host_fracs.append(frac)
+            out.append(row(
+                f"figpre/S{S:g}_{placement}", 0.0,
+                f"prepost_frac={frac:.3f};prepost_ms={prepost*1e3:.2f};"
+                f"ai_ms={ai*1e3:.2f}"))
+    assert all(b > a for a, b in zip(host_fracs, host_fracs[1:])), \
+        f"host pre+post fraction not strictly increasing: {host_fracs}"
+
+    s_max = SWEEP[-1]
+    host_pp = measured["host"]["pre"] + measured["host"]["post"]
+    dev_pp_measured = measured["device"]["pre"] + measured["device"]["post"]
+    dev_pp = dev_pp_measured / s_max
+    # measured-level regression guard FIRST: the /S emulation must not
+    # paper over a device path that got slower than the host baseline
+    # (1.5x slack absorbs CI clock noise; steady-state it is ~0.6x)
+    assert dev_pp_measured <= 1.5 * host_pp, \
+        (f"device pre/post path measured slower than host: "
+         f"device={dev_pp_measured*1e3:.2f}ms host={host_pp*1e3:.2f}ms")
+    assert host_pp >= 2.0 * dev_pp, \
+        (f"device placement saves <2x pre/post at S={s_max:g}: "
+         f"host={host_pp*1e3:.2f}ms device={dev_pp*1e3:.2f}ms")
+    out.append(row(
+        f"figpre/offload_at_S{s_max:g}", 0.0,
+        f"host_prepost_ms={host_pp*1e3:.2f};"
+        f"device_prepost_ms={dev_pp*1e3:.2f};"
+        f"saving={host_pp/dev_pp:.1f}x;bar=2x"))
+
+    cases, us = timed(_nms_battery, 12 if smoke else 40)
+    out.append(row("figpre/nms_parity", us,
+                   f"bit_identical=True;cases={cases}"))
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized battery; same sweep and assertions")
+    print("\n".join(run(smoke=ap.parse_args().smoke)))

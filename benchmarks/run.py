@@ -22,6 +22,7 @@ MODULES = [
     "benchmarks.fig_batching_sweep",
     "benchmarks.fig_cluster_scaling",
     "benchmarks.fig_fused_path",
+    "benchmarks.fig_preprocess_offload",
     "benchmarks.fig_roofline_sweep",
     "benchmarks.tab34_tco",
     "benchmarks.roofline_table",

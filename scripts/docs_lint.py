@@ -1,25 +1,62 @@
-"""Docs lint: the figure map must cover every benchmark module.
+"""Docs lint: the prose must cover the code, and stay navigable.
 
 Checks (exit non-zero on any failure):
   * README.md and the docs/ pages exist and are non-trivial;
+  * every intra-repo markdown link in README.md / docs/*.md resolves
+    to a real file (anchors stripped; external/anchor-only links
+    skipped);
   * every ``benchmarks/*.py`` module (minus shared plumbing) is
     mentioned in docs/figures.md;
-  * every module registered in benchmarks/run.py MODULES has a file.
-Run via ``make docs-lint``.
+  * figure-registry sync, both directions: every module registered in
+    ``benchmarks/run.py`` MODULES has a file, and every non-plumbing
+    benchmark file is registered (an unregistered benchmark never runs
+    in the sweep — silent coverage loss);
+  * every public module under ``src/repro/`` (no ``_``-prefixed path
+    component) carries a module docstring.
+Run via ``make docs-check`` (``make docs-lint`` is an alias).
 """
 from __future__ import annotations
 
+import ast
 import pathlib
 import re
 import sys
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 PLUMBING = {"common.py", "run.py", "__init__.py"}
-REQUIRED_DOCS = ["README.md", "docs/figures.md", "docs/ai_tax_accounting.md"]
+REQUIRED_DOCS = ["README.md", "docs/architecture.md", "docs/figures.md",
+                 "docs/ai_tax_accounting.md"]
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def _check_links(md: pathlib.Path, errors: list[str]) -> None:
+    for target in _LINK.findall(md.read_text()):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        if not (md.parent / path).exists():
+            errors.append(f"{md.relative_to(ROOT)}: broken link -> {target}")
+
+
+def _check_docstrings(errors: list[str]) -> None:
+    for py in sorted((ROOT / "src" / "repro").rglob("*.py")):
+        rel = py.relative_to(ROOT)
+        if any(part.startswith("_") and part != "__init__.py"
+               for part in rel.parts):
+            continue
+        try:
+            tree = ast.parse(py.read_text())
+        except SyntaxError as e:
+            errors.append(f"{rel}: syntax error ({e})")
+            continue
+        if not ast.get_docstring(tree):
+            errors.append(f"{rel}: public module missing a docstring")
 
 
 def main() -> int:
-    errors = []
+    errors: list[str] = []
     for rel in REQUIRED_DOCS:
         p = ROOT / rel
         if not p.is_file():
@@ -27,24 +64,34 @@ def main() -> int:
         elif len(p.read_text().split()) < 50:
             errors.append(f"doc too thin (<50 words): {rel}")
 
+    for md in [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]:
+        if md.is_file():
+            _check_links(md, errors)
+
     figmap = ROOT / "docs" / "figures.md"
     figtext = figmap.read_text() if figmap.is_file() else ""
+    runpy = (ROOT / "benchmarks" / "run.py").read_text()
+    registered = set(re.findall(r'"benchmarks\.(\w+)"', runpy))
     for bench in sorted((ROOT / "benchmarks").glob("*.py")):
         if bench.name in PLUMBING:
             continue
         if bench.name not in figtext:
             errors.append(f"benchmarks/{bench.name} not in docs/figures.md")
-
-    runpy = (ROOT / "benchmarks" / "run.py").read_text()
-    for mod in re.findall(r'"benchmarks\.(\w+)"', runpy):
+        if bench.stem not in registered:
+            errors.append(f"benchmarks/{bench.name} not registered in "
+                          "benchmarks/run.py MODULES")
+    for mod in registered:
         if not (ROOT / "benchmarks" / f"{mod}.py").is_file():
             errors.append(f"run.py registers benchmarks.{mod} but no file")
+
+    _check_docstrings(errors)
 
     for e in errors:
         print(f"docs-lint: {e}", file=sys.stderr)
     if not errors:
-        print(f"docs-lint: OK ({len(REQUIRED_DOCS)} docs, figure map "
-              "covers all benchmarks)")
+        print(f"docs-lint: OK ({len(REQUIRED_DOCS)} docs, links resolve, "
+              "figure map + run.py registry cover all benchmarks, "
+              "public modules documented)")
     return 1 if errors else 0
 
 

@@ -15,10 +15,13 @@ Two service modes:
     the DES and the closed-form queueing model, so the S at which the
     live cluster destabilizes is directly cross-validatable
     (``repro.cluster.crossval``).
-  * ``service="real"`` — messages carry actual uint8 crops and the
-    replica runs the SAME device-resident identify stack as
-    ``StreamingPipeline`` (``facerec.build_identify_stack``): real
-    compute, real host<->device boundary, hardware-dependent latency.
+  * ``service="real"`` — messages carry codec-encoded crops (planar
+    YUV, the wire format) and the replica runs the SAME stack as
+    ``StreamingPipeline`` (``facerec.build_identify_stack``): decode
+    through the stack's preprocess stage — ``ClusterSpec.placement``
+    moves that decode between host NumPy and the device program —
+    then the device-resident fused identify. Real compute, real
+    host<->device boundary, hardware-dependent latency.
 
 Time compression: all modeled durations are divided by
 ``time_compression`` so a 6-model-second experiment takes ~1.5 wall
@@ -77,6 +80,8 @@ class ClusterSpec:
     admission: str = "none"              # none | drop | block
     partition_capacity: int = 64         # in-flight bound for drop/block
     fetch_max_wait_s: float | None = None   # default: bk.fetch_max_wait_s
+    placement: str = "host"              # real mode: where the replica's
+    #                                      crop decode runs (host|device)
 
     @property
     def eff(self) -> float:
@@ -142,7 +147,9 @@ class ClusterResult:
         return self.dropped / offered if offered else 0.0
 
     def ai_tax(self) -> dict:
-        return self.log.ai_tax(ai_stages={"identify"})
+        from repro.core import facerec
+        return self.log.ai_tax(ai_stages={"identify"},
+                               category_of=facerec.stage_category)
 
     def to_dict(self) -> dict:
         d = dict(self.__dict__)
@@ -193,16 +200,25 @@ class ServingCluster:
         if sp.service == "real":
             import numpy as np
             from repro.core import facerec
-            _, _, fused = facerec.build_identify_stack(
-                seed=sp.seed, fast_path=True)
+            # same shared factory as StreamingPipeline (the replica IS
+            # the pipeline's identify stage): the replica decodes the
+            # wire-format YUV crops through the stack's preprocess
+            # stage (sp.placement moves that work host<->device) and
+            # identifies with the fused device program. The stage logs
+            # nowhere here — its clock is wall time, this log is model
+            # time; the decode cost lands inside the measured service
+            # span instead.
+            stack = facerec.build_identify_stack(
+                seed=sp.seed, fast_path=True, placement=sp.placement)
             # warm every power-of-two batch bucket the drain-all fetch
             # can produce BEFORE the clock starts: a mid-run jit
             # compile (~100ms+) would otherwise masquerade as queueing
             # collapse and poison the divergence signal
             for b in (1, 2, 4, 8, 16, 32, 64):
-                fused.identify_crops(
-                    np.zeros((b, 48, 48, 3), np.uint8))
-            self._identify = fused
+                stack.fused.identify_crops(stack.preprocess.decode(
+                    np.zeros((b, 3, 48, 48), np.uint8)))
+            self._identify = stack.fused
+            self._preprocess = stack.preprocess
         self.t0 = time.perf_counter()
         self.wall_deadline = self.t0 + sp.sim_time / sp.time_compression
         self.topic = LiveTopic("faces", sp.partitions, sp.scaled_broker(),
@@ -318,8 +334,11 @@ class ServingCluster:
         msg.meta["scheduled"] = scheduled_model
         if sp.service == "real":
             import numpy as np
+            from repro.preprocess import host as pre_host
             crop = crop_rng.integers(0, 256, (48, 48, 3), dtype=np.uint8)
-            msg.meta["crop"] = crop
+            # the wire format: codec-encoded planar YUV (the encode
+            # stands for the camera/codec, like the pipeline's ingest)
+            msg.meta["crop_yuv"] = pre_host.rgb_to_yuv(crop)
             msg.size = float(crop.nbytes)
         with self._lock:
             self._lag_sum += max(0.0, now - scheduled_model)
@@ -443,9 +462,20 @@ class ServingCluster:
                          payload_bytes=int(msg.size))
         if sp.service == "real":
             import numpy as np
-            stack = np.stack([m.meta["crop"] for m in batch])
+            from repro.core import facerec
+            yuv = np.stack([m.meta["crop_yuv"] for m in batch])
             w0 = time.perf_counter()
-            self._identify.identify_crops(stack)
+            # decode (host or device per spec.placement), then the
+            # fused identify; only the jitted device path pads to pow2
+            # (aligning with the pre-warmed buckets) — host NumPy has
+            # no compile cache, so padding would just be wasted work
+            # inside the measured service span
+            if self._preprocess.placement == "device":
+                rgb = self._preprocess.decode(
+                    facerec._pad_rows_pow2(yuv))[:len(batch)]
+            else:
+                rgb = self._preprocess.decode(yuv)
+            self._identify.identify_crops(rgb)
             dur_model = ((time.perf_counter() - w0)
                          * sp.time_compression)
         else:

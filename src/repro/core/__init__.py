@@ -1,3 +1,11 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""The paper's application and analysis layer (its primary contribution).
+
+The SYSTEM lives here, in the host framework: the live streaming
+pipeline and its micro-batching, the event-level tax instrumentation,
+the face-recognition model stack and shared identify-stack factory,
+the Kafka-style broker model, closed-form queueing stability, the
+discrete-event cluster simulator, Amdahl/acceleration analytics, and
+the TCO tables. Sibling subpackages supply substrates: ``kernels``
+(Pallas), ``preprocess`` (the pre/post tax), ``cluster`` (live
+multi-replica serving), ``roofline`` (calibrated cost model).
+"""

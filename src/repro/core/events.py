@@ -15,6 +15,36 @@ from collections import defaultdict
 from dataclasses import dataclass, field
 
 
+FIVE_WAY = ("pre", "ai", "post", "transfer", "queue")
+
+
+def five_way_fractions(per_stage: dict[str, float], category_of,
+                       ) -> dict[str, float]:
+    """Attribute a per-stage time breakdown into the five tax buckets.
+
+    ``category_of`` maps a stage name to one of :data:`FIVE_WAY`
+    (e.g. :func:`repro.core.facerec.stage_category`, or
+    :func:`repro.core.taxmeter.taxed_stage_category` for TaxedStep
+    logs). Every stage lands in exactly one bucket, so the returned
+    fractions sum to 1 whenever any time was recorded — the paper's
+    "every microsecond is somebody's tax" discipline. Shared by the
+    live pipeline, the DES breakdown (``fig06``) and the TaxedStep
+    harness, so the figures and the runtime can never drift onto
+    different stage lists.
+    """
+    totals = dict.fromkeys(FIVE_WAY, 0.0)
+    for stage, t in per_stage.items():
+        cat = category_of(stage)
+        if cat not in totals:
+            raise ValueError(f"category {cat!r} for stage {stage!r} not in "
+                             f"{FIVE_WAY}")
+        totals[cat] += t
+    grand = sum(totals.values())
+    if not grand:
+        return totals
+    return {k: v / grand for k, v in totals.items()}
+
+
 @dataclass
 class Event:
     request_id: int
@@ -60,6 +90,45 @@ class EventLog:
         return self.log(request_id, stage, t0, t0 if t_end is None else t_end,
                         payload_bytes=nbytes, kind="transfer",
                         direction=direction, boundary=boundary)
+
+    def log_batch_span(self, rids, stage: str, t_start: float, t_end: float,
+                       payload_bytes: int = 0, split_payload: bool = False,
+                       **meta) -> None:
+        """Amortize one batched span into per-request events.
+
+        The batch's wall span is partitioned into ``len(rids)`` equal
+        slices (``duration = span / B``), each tagged
+        ``batch_size=B`` — the discipline docs/ai_tax_accounting.md
+        describes, shared by the pipeline's AI stages, the preprocess
+        stage, and the benchmarks. ``payload_bytes`` is per-item by
+        default; with ``split_payload`` it is a batch total, divided
+        across items with the remainder on the first so the batch sum
+        stays exact.
+        """
+        B = max(len(rids), 1)
+        dt = (t_end - t_start) / B
+        for i, rid in enumerate(rids):
+            per = (payload_bytes // B + (payload_bytes % B if i == 0 else 0)
+                   if split_payload else payload_bytes)
+            self.log(rid, stage, t_start + i * dt, t_start + (i + 1) * dt,
+                     payload_bytes=per, batch_size=B, **meta)
+
+    def log_batch_transfers(self, rids, boundary: str, h2d: int, d2h: int,
+                            t: float | None = None) -> None:
+        """Per-item transfer events for one batched boundary crossing.
+
+        The batch's boundary bytes (padding included — padded rows
+        cross too) are split across its items, remainder on the first,
+        so per-request accounting and batch totals both stay exact.
+        Shared by the streaming pipeline's AI stages and the
+        preprocess stage's device placement.
+        """
+        t = time.perf_counter() if t is None else t
+        B = max(len(rids), 1)
+        for j, rid in enumerate(rids):
+            extra_up, extra_dn = (h2d % B, d2h % B) if j == 0 else (0, 0)
+            self.log_transfer(rid, "h2d", h2d // B + extra_up, boundary, t)
+            self.log_transfer(rid, "d2h", d2h // B + extra_dn, boundary, t)
 
     def transfer_bytes(self, boundary: str | None = None) -> dict[str, int]:
         """Total transferred bytes by direction (optionally one boundary)."""
@@ -122,7 +191,36 @@ class EventLog:
         e2e = self.end_to_end()
         return sum(e2e) / len(e2e) if e2e else 0.0
 
-    def ai_tax(self, ai_stages: set[str]) -> dict[str, float]:
+    def _kind_aware(self, category_of):
+        """Wrap a stage->bucket map with the authoritative-kind rule:
+        stages whose events carry ``kind="transfer"`` meta are forced
+        into the ``transfer`` bucket regardless of name."""
+        transfer_set = {ev.stage for ev in self.events
+                        if ev.meta.get("kind") == "transfer"}
+        return lambda s: "transfer" if s in transfer_set else category_of(s)
+
+    def five_way(self, category_of) -> dict[str, float]:
+        """Five-way mean-latency attribution: {pre, ai, post, transfer,
+        queue}, summing to 1 (see :func:`five_way_fractions`)."""
+        return five_way_fractions(self.breakdown(),
+                                  self._kind_aware(category_of))
+
+    def five_way_seconds(self, category_of) -> dict[str, float]:
+        """Total busy seconds per five-way bucket (sums, not means).
+
+        The same attribution as :meth:`five_way` over summed event
+        durations — what the offload benchmarks scale under emulated
+        acceleration. One implementation of the kind-override rule for
+        both aggregations, so they cannot drift.
+        """
+        cat = self._kind_aware(category_of)
+        out = dict.fromkeys(FIVE_WAY, 0.0)
+        for ev in self.events:
+            out[cat(ev.stage)] += ev.duration
+        return out
+
+    def ai_tax(self, ai_stages: set[str],
+               category_of=None) -> dict[str, float]:
         """Fraction of total time in AI vs supporting stages (the AI tax).
 
         The tax side is further split: stages whose events carry
@@ -130,6 +228,12 @@ class EventLog:
         as ``transfer_fraction`` (a subset of ``tax_fraction``), and
         the boundary bytes they moved as ``transfer_bytes`` — so the
         breakdown reads AI vs pre/post-processing vs data movement.
+
+        With ``category_of`` (a stage-name -> :data:`FIVE_WAY` bucket
+        map), the report gains the full five-way attribution:
+        ``fractions`` (summing to 1) plus ``pre_fraction`` /
+        ``post_fraction`` — the pre/post-processing tax split the
+        offload benchmarks sweep.
         """
         by_stage = self.breakdown()
         transfer_set = {ev.stage for ev in self.events
@@ -137,12 +241,18 @@ class EventLog:
         ai = sum(v for s, v in by_stage.items() if s in ai_stages)
         transfer = sum(v for s, v in by_stage.items() if s in transfer_set)
         total = sum(by_stage.values())
-        return {"ai_fraction": ai / total if total else 0.0,
-                "tax_fraction": 1.0 - (ai / total if total else 0.0),
-                "transfer_fraction": transfer / total if total else 0.0,
-                "transfer_bytes": self.transfer_bytes(),
-                "total_latency": total,
-                "per_stage": by_stage}
+        out = {"ai_fraction": ai / total if total else 0.0,
+               "tax_fraction": 1.0 - (ai / total if total else 0.0),
+               "transfer_fraction": transfer / total if total else 0.0,
+               "transfer_bytes": self.transfer_bytes(),
+               "total_latency": total,
+               "per_stage": by_stage}
+        if category_of is not None:
+            fr = self.five_way(category_of)
+            out["fractions"] = fr
+            out["pre_fraction"] = fr["pre"]
+            out["post_fraction"] = fr["post"]
+        return out
 
     def throughput(self) -> float:
         """Completed requests per second over the observed span."""

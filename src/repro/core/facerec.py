@@ -11,6 +11,7 @@ recall is testable.
 from __future__ import annotations
 
 import functools
+from dataclasses import dataclass
 
 import numpy as np
 
@@ -18,11 +19,41 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
+from repro.preprocess.stage import NormSpec, PreprocessStage
 
 THUMB = 32          # thumbnail side (paper: 160x160)
 EMBED_DIM = 128     # paper: 128-byte feature vector
 CROP_SIZE = 48      # detection crop window fed to the THUMB resize
 DETECT_POOL = 8     # heatmap downsampling factor (full-res / pool)
+
+# canonical five-way bucket per face-pipeline stage (live pipeline AND
+# DES — both emit these names), used by EventLog.five_way and by the
+# fig06/fig08 benchmarks so figures and runtime share one attribution
+_STAGE_CATEGORY = {
+    "ingest": "pre", "detect": "ai", "identify": "ai",
+    "wait": "queue", "wait_frames": "queue", "reject": "queue",
+    "transfer": "transfer",
+}
+
+
+def stage_category(stage: str) -> str:
+    """Face-pipeline stage name -> {pre, ai, post, transfer, queue}.
+
+    Prefix-typed stages (``pre_*``/``post_*`` from
+    :class:`repro.preprocess.PreprocessStage`) classify themselves;
+    unknown supporting stages default to ``pre`` (work around the AI
+    that isn't a queue or a crossing is pre/post-processing — the
+    paper's residual-tax convention).
+    """
+    if stage in _STAGE_CATEGORY:
+        return _STAGE_CATEGORY[stage]
+    if stage.startswith("pre_"):
+        return "pre"
+    if stage.startswith("post_"):
+        return "post"
+    if "wait" in stage:
+        return "queue"
+    return "pre"
 
 
 def _pad_pow2(n: int) -> int:
@@ -163,14 +194,23 @@ def crop_thumbnails_batch(frames: list[np.ndarray],
     return _regroup(thumbs, counts)
 
 
-@functools.partial(jax.jit, static_argnums=(3,))
-def _embed_batch_jit(thumbs, w1, w2, impl):
+@functools.partial(jax.jit, static_argnums=(3, 4))
+def _embed_batch_jit(thumbs, w1, w2, impl, norm):
     """Module-level jit: the compile cache is shared across Embedder
     instances (weights are traced arguments), so fresh pipelines reuse
     already-compiled batch buckets. The kernel impl is a static arg —
     resolved by the caller at call time, not frozen at first trace —
-    so ops.set_default_impl/default_impl switches keep working."""
-    x = thumbs.reshape(thumbs.shape[0], -1) / 255.0
+    so ops.set_default_impl/default_impl switches keep working. The
+    norm spec is static too: the default (to_unit, zero mean, unit
+    std) traces to the literal ``/ 255.0`` this path always had."""
+    x = thumbs.astype(jnp.float32)
+    if norm.to_unit:
+        x = x / 255.0
+    if any(m != 0.0 for m in norm.mean):
+        x = x - jnp.asarray(norm.mean, jnp.float32)
+    if any(s != 1.0 for s in norm.std):
+        x = x / jnp.asarray(norm.std, jnp.float32)
+    x = x.reshape(x.shape[0], -1)
     h = jnp.tanh(ops.matmul(x, w1, impl=impl))
     e = ops.matmul(h, w2, impl=impl)
     # clamp: zero-padded rows would otherwise normalize 0/0 -> NaN
@@ -186,13 +226,19 @@ class Embedder:
     (B, THUMB, THUMB, 3) stack, two ops.matmul contractions (Pallas on
     TPU), so B faces cost one kernel launch instead of B. The scalar
     ``__call__`` delegates to it with B=1 so the two paths never drift.
+
+    ``norm`` is the crop normalization (default: the historical
+    ``/255``), normally supplied by the preprocess stage's
+    ``crop_norm`` so host embed and the fused device fold share one
+    set of constants.
     """
 
-    def __init__(self, seed: int = 7):
+    def __init__(self, seed: int = 7, norm: NormSpec | None = None):
         k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
         d_in = THUMB * THUMB * 3
         self.w1 = jax.random.normal(k1, (d_in, 256)) / d_in**0.5
         self.w2 = jax.random.normal(k2, (256, EMBED_DIM)) / 16.0
+        self.norm = norm or NormSpec(to_unit=True)
 
     def embed_batch(self, thumbs: np.ndarray) -> np.ndarray:
         """thumbs: (B, THUMB, THUMB, 3) -> (B, EMBED_DIM), unit rows.
@@ -203,7 +249,7 @@ class Embedder:
         B = thumbs.shape[0]
         return np.asarray(_embed_batch_jit(
             jnp.asarray(_pad_rows_pow2(thumbs)), self.w1, self.w2,
-            ops.get_default_impl()))[:B]
+            ops.get_default_impl(), self.norm))[:B]
 
     def __call__(self, thumb: np.ndarray) -> np.ndarray:
         return self.embed_batch(np.asarray(thumb)[None])[0]
@@ -231,8 +277,8 @@ class Classifier:
 # Device-resident fast path: crop-stack -> embed -> gallery, one program
 # --------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnums=(4,))
-def _fused_identify_jit(crops, w1f, w2, gal_t, impl):
+@functools.partial(jax.jit, static_argnums=(5,))
+def _fused_identify_jit(crops, w1f, b1, w2, gal_t, impl):
     """One device program for the whole identify hot loop.
 
     The bilinear resize is linear, so it is pre-composed into ``w1f``
@@ -241,9 +287,12 @@ def _fused_identify_jit(crops, w1f, w2, gal_t, impl):
     layer in VMEM, then the embedding matmul, normalization, and the
     gallery similarity + argmax all run on-device. Only the crop stack
     crosses host->device and only (name-index, score) crosses back.
+    ``b1`` carries the normalization offset fold (None when the crop
+    norm has no mean shift — the default — keeping the historical
+    trace).
     """
     x = crops.reshape(crops.shape[0], -1).astype(jnp.float32)
-    h = ops.matmul(x, w1f, epilogue="tanh", impl=impl)
+    h = ops.matmul(x, w1f, bias=b1, epilogue="tanh", impl=impl)
     e = ops.matmul(h, w2, impl=impl)
     e = e / jnp.maximum(jnp.linalg.norm(e, axis=-1, keepdims=True), 1e-12)
     sims = e @ gal_t
@@ -268,22 +317,43 @@ class FusedIdentifier:
     — turning crop-pixels -> hidden into a single (crop_px, 256)
     matmul. Per call, only the uint8 crop stack goes up and a
     (name-index, score) pair per face comes down.
+
+    The crop normalization folds in the same way: its per-channel
+    scale multiplies the folded columns (the historical ``/255`` is
+    just the default spec) and its offset becomes a bias on the first
+    matmul's fused epilogue. The spec comes from the preprocess
+    stage's ``crop_norm`` when one is supplied — the stage is the
+    single owner of normalization constants — else the embedder's.
     """
 
     def __init__(self, embedder: Embedder, classifier: Classifier,
-                 crop_size: int = CROP_SIZE):
+                 crop_size: int = CROP_SIZE,
+                 preprocess: PreprocessStage | None = None):
         from repro.kernels.resize import _interp_matrix
         self.size = crop_size
         self.names = classifier.names
+        norm = preprocess.crop_norm if preprocess is not None \
+            else embedder.norm
         ry = _interp_matrix(THUMB, crop_size).astype(np.float64)
         rx = _interp_matrix(THUMB, crop_size).astype(np.float64)
         w1r = np.asarray(embedder.w1, np.float64).reshape(THUMB, THUMB, 3, -1)
         # optimize=True: contract pairwise (Ry first, then Rx) instead of
         # a naive 6-index loop — ~100x faster, identical result
-        w1f = np.einsum("ts,uv,tucj->svcj", ry, rx, w1r,
-                        optimize=True) / 255.0
+        scale64 = 1.0 / ((255.0 if norm.to_unit else 1.0)
+                         * np.asarray(norm.std, np.float64))
+        w1f = np.einsum("ts,uv,tucj->svcj", ry, rx, w1r, optimize=True) \
+            * scale64[None, None, :, None]
         self.w1f = jnp.asarray(
             w1f.reshape(crop_size * crop_size * 3, -1).astype(np.float32))
+        offset = -np.asarray(norm.mean, np.float64) \
+            / np.asarray(norm.std, np.float64)
+        if np.any(offset):
+            # bias_j = sum_{ty,tx,c} v_c * w1[(ty,tx,c), j]: the affine
+            # offset is spatially constant, so it bypasses the resize
+            self.b1 = jnp.asarray(
+                np.einsum("c,tucj->j", offset, w1r).astype(np.float32))
+        else:
+            self.b1 = None
         self.w2 = embedder.w2
         self.gal_t = jnp.asarray(classifier.mat.T)    # (EMBED_DIM, G)
 
@@ -297,7 +367,7 @@ class FusedIdentifier:
         B = crops.shape[0]
         idx, score = _fused_identify_jit(
             jnp.asarray(_pad_rows_pow2(np.ascontiguousarray(crops))),
-            self.w1f, self.w2, self.gal_t, ops.get_default_impl())
+            self.w1f, self.b1, self.w2, self.gal_t, ops.get_default_impl())
         idx, score = np.asarray(idx)[:B], np.asarray(score)[:B]
         return [(self.names[i], float(s)) for i, s in zip(idx, score)]
 
@@ -312,10 +382,26 @@ class FusedIdentifier:
         return _regroup(self.identify_crops(crops), counts)
 
 
+@dataclass
+class IdentifyStack:
+    """Everything one deployment of the identify stage needs.
+
+    ``preprocess`` is first-class: the stage that owns decode /
+    letterbox / NMS and every normalization constant, switchable
+    between ``placement="host"`` and ``"device"``. The embedder and
+    the fused identifier both derive their crop normalization from it,
+    so the three consumers (streaming pipeline, serving-cluster
+    replicas, standalone benchmarks) cannot drift apart.
+    """
+    embedder: Embedder
+    classifier: Classifier
+    fused: FusedIdentifier | None
+    preprocess: PreprocessStage
+
+
 def build_identify_stack(seed: int = 0, gallery_size: int = 8,
-                         fast_path: bool = True,
-                         ) -> tuple[Embedder, Classifier,
-                                    FusedIdentifier | None]:
+                         fast_path: bool = True, placement: str = "host",
+                         log=None) -> IdentifyStack:
     """The identification stage's model stack, built once.
 
     Shared by every deployment of the stage: ``StreamingPipeline``
@@ -324,15 +410,22 @@ def build_identify_stack(seed: int = 0, gallery_size: int = 8,
     factory — so a cluster replica IS the pipeline's identify stage,
     not a reimplementation. The gallery is ``gallery_size`` synthetic
     identities embedded at init (deterministic in ``seed``).
+
+    ``placement`` selects where the pre/post-processing runs (host
+    NumPy vs jitted/Pallas device programs); ``log`` is the EventLog
+    the preprocess stage accounts into (attachable later via
+    ``stack.preprocess.log = ...``).
     """
-    embedder = Embedder()
+    preprocess = PreprocessStage(placement, log=log)
+    embedder = Embedder(norm=preprocess.crop_norm)
     rng = np.random.default_rng(seed)
     thumbs = rng.uniform(0, 255, (gallery_size, THUMB, THUMB, 3))
     gallery_embs = embedder.embed_batch(thumbs.astype(np.float32))
     classifier = Classifier(
         {f"person_{i}": gallery_embs[i] for i in range(gallery_size)})
-    fused = FusedIdentifier(embedder, classifier) if fast_path else None
-    return embedder, classifier, fused
+    fused = (FusedIdentifier(embedder, classifier, preprocess=preprocess)
+             if fast_path else None)
+    return IdentifyStack(embedder, classifier, fused, preprocess)
 
 
 def identify_fused_batch(frames: list[np.ndarray],

@@ -31,6 +31,19 @@ movement and ``benchmarks/fig_fused_path.py`` can show the transfer
 bytes the fused path eliminates. ``fast_path=False`` keeps the unfused
 crop -> device resize -> thumbnail -> device embed -> host classify
 chain for comparison.
+
+Pre/post-processing is a first-class stage
+(:class:`repro.preprocess.PreprocessStage`, built by the shared
+``facerec.build_identify_stack`` factory): frames arrive as planar YUV
+(the camera wire format), are decoded and letterbox-resized by the
+stage (``pre_decode``/``pre_letterbox`` events), the detection heatmap
+is thresholded + NMS-suppressed by it (``post_nms``), and crop
+extraction is logged as ``pre_crop`` — so
+``PipelineResult.ai_tax()["fractions"]`` attributes every microsecond
+to {pre, ai, post, transfer, queue}. ``placement="device"`` moves the
+decode/letterbox/NMS math into jitted (Pallas-backed) device programs
+and logs the extra boundary bytes; ``placement="host"`` is the paper's
+measured CPU deployment.
 """
 from __future__ import annotations
 
@@ -64,14 +77,16 @@ class PipelineResult:
         return self.matched / self.ground_truth if self.ground_truth else 1.0
 
     def ai_tax(self) -> dict:
-        return self.log.ai_tax(ai_stages={"detect", "identify"})
+        return self.log.ai_tax(ai_stages={"detect", "identify"},
+                               category_of=facerec.stage_category)
 
 
 class StreamingPipeline:
     def __init__(self, *, n_frames: int = 60, fuse_ingest_detect: bool = True,
                  n_identify_workers: int = 2, seed: int = 0,
                  gallery_size: int = 8, batch_size: int = 1,
-                 batch_timeout_ms: float = 5.0, fast_path: bool = True):
+                 batch_timeout_ms: float = 5.0, fast_path: bool = True,
+                 placement: str = "host"):
         self.n_frames = n_frames
         self.fused = fuse_ingest_detect
         self.n_workers = n_identify_workers
@@ -82,13 +97,19 @@ class StreamingPipeline:
         self.log = EventLog()
         # the identify stage's model stack comes from the shared factory
         # (cluster replicas build theirs from the same one): embedder,
-        # gallery classifier, and — with fast_path — the device-resident
-        # FusedIdentifier whose resize operator is pre-composed with the
+        # gallery classifier, the placement-switchable preprocess stage
+        # (decode/letterbox/NMS, accounting into this pipeline's log),
+        # and — with fast_path — the device-resident FusedIdentifier
+        # whose resize operator + crop norm are pre-composed with the
         # embedder's first layer; fast_path=False keeps the unfused
         # crop->resize->embed->host-classify chain for comparison
-        self.embedder, self.classifier, self.fused_identifier = \
-            facerec.build_identify_stack(seed=seed, gallery_size=gallery_size,
-                                         fast_path=fast_path)
+        stack = facerec.build_identify_stack(
+            seed=seed, gallery_size=gallery_size, fast_path=fast_path,
+            placement=placement, log=self.log)
+        self.embedder = stack.embedder
+        self.classifier = stack.classifier
+        self.fused_identifier = stack.fused
+        self.preprocess = stack.preprocess
         # broker topics (queues); maxsize models bounded broker capacity
         self.faces_topic: queue.Queue = queue.Queue(maxsize=4096)
         self.frames_topic: queue.Queue = queue.Queue(maxsize=1024)
@@ -107,28 +128,23 @@ class StreamingPipeline:
 
     def _log_batch_transfers(self, items, boundary: str, h2d: int,
                              d2h: int) -> None:
-        """Per-item transfer events for one batched boundary crossing.
-
-        The batch's boundary bytes (padding included — padded rows
-        cross too) are split across its items, remainder on the first,
-        so per-request accounting and batch totals both stay exact.
-        """
-        t = time.perf_counter()
-        B = len(items)
-        for j, item in enumerate(items):
-            rid = item[0]
-            extra_up, extra_dn = (h2d % B, d2h % B) if j == 0 else (0, 0)
-            self.log.log_transfer(rid, "h2d", h2d // B + extra_up,
-                                  boundary, t)
-            self.log.log_transfer(rid, "d2h", d2h // B + extra_dn,
-                                  boundary, t)
+        """Per-item transfer events for one batched boundary crossing
+        (items are (rid, ...) tuples; see EventLog.log_batch_transfers)."""
+        self.log.log_batch_transfers([it[0] for it in items], boundary,
+                                     h2d, d2h)
 
     # ---- stages ------------------------------------------------------------
 
     def _ingest_frames(self):
-        """Parse + resize (pre-processing only — no AI)."""
-        from repro.kernels import ops
-        import jax.numpy as jnp
+        """Decode + letterbox resize (pre-processing only — no AI).
+
+        The synthetic camera ships planar YUV (``rgb_to_yuv`` stands
+        for the codec and is deliberately outside every taxed span);
+        the taxed ingest is the preprocess stage's decode + letterbox,
+        logged as ``pre_decode``/``pre_letterbox``, with the residual
+        dtype cast under the ``ingest`` stage name.
+        """
+        from repro.preprocess import host as pre_host
         # fused mode: push-fed batcher — in-process micro-batching at the
         # ingest->detect boundary with the same flush policy as the
         # broker-fed stages
@@ -137,18 +153,15 @@ class StreamingPipeline:
                    if self.fused else None)
         for i in range(self.n_frames):
             frame = self.video.next_frame()
+            H, W = frame.pixels.shape[:2]
+            yuv = pre_host.rgb_to_yuv(frame.pixels)[None]    # wire format
+            small_f = self.preprocess.ingest(yuv, H // 2, W // 2,
+                                             rids=[frame.index])[0]
             with Timer(self.log, frame.index, "ingest",
                        payload_bytes=frame.pixels.nbytes):
-                small = np.asarray(ops.resize_bilinear(
-                    jnp.asarray(frame.pixels, jnp.float32),
-                    frame.pixels.shape[0] // 2, frame.pixels.shape[1] // 2))
                 # emit uint8 once: 4x smaller broker payloads, and every
                 # downstream consumer (detect cast, crop) sees one dtype
-                small = np.clip(small, 0, 255).astype(np.uint8)
-            self.log.log_transfer(frame.index, "h2d",
-                                  frame.pixels.size * 4, "ingest_resize")
-            self.log.log_transfer(frame.index, "d2h",
-                                  small.size * 4, "ingest_resize")
+                small = np.clip(small_f, 0, 255).astype(np.uint8)
             item = (frame.index, small, frame.true_boxes, time.perf_counter())
             if self.fused:
                 if (batch := batcher.push(item)) is not None:
@@ -181,31 +194,45 @@ class StreamingPipeline:
         self._merge_stats("detect", batcher.stats)
 
     def _detect_batch(self, items):
-        """Detect + crop over a stacked frame batch; per-request events.
+        """Detect + NMS + crop over a stacked frame batch.
 
-        fast_path: the per-face payload pushed to the faces topic is the
-        raw uint8 crop (pure numpy slicing — the resize moved on-device
-        into the fused identify program). Unfused: crops round-trip
-        through the device resize here and float32 thumbnails cross the
-        broker, exactly the transfer tax the fused path eliminates.
+        The three phases log under their own tax buckets: the dense
+        heatmap is the AI (``detect``), the threshold + IoU NMS is the
+        preprocess stage's ``post_nms`` (host or device per its
+        placement), and crop extraction — input preparation for the
+        identify stage — is ``pre_crop``. fast_path: the per-face
+        payload pushed to the faces topic is the raw uint8 crop (pure
+        numpy slicing — the resize moved on-device into the fused
+        identify program). Unfused: crops round-trip through the
+        device resize here and float32 thumbnails cross the broker,
+        exactly the transfer tax the fused path eliminates.
         """
+        import jax.numpy as jnp
         B = len(items)
+        rids = [it[0] for it in items]
         frames = [it[1] for it in items]
         smalls = np.stack(frames)
         t0 = time.perf_counter()
-        centers_per = facerec.detect_faces_batch(smalls)
+        hms = np.asarray(facerec.detect_heatmap_batch(
+            jnp.asarray(facerec._pad_rows_pow2(smalls))))[:B]
+        t1 = time.perf_counter()
+        # amortize the batched span back to per-request detect events
+        self.log.log_batch_span(rids, "detect", t0, t1,
+                                payload_bytes=smalls[0].nbytes)
+        # post-processing: threshold + greedy IoU NMS (logs "post_nms")
+        centers_per = self.preprocess.postprocess(
+            hms, facerec.DETECT_POOL, rids=rids)
+        t2 = time.perf_counter()
         if self.fast_path:
             crops, counts = facerec.crop_stacks(frames, centers_per)
             faces_per = (facerec._regroup(crops, counts) if crops is not None
                          else [[] for _ in items])
         else:
             faces_per = facerec.crop_thumbnails_batch(frames, centers_per)
-        t1 = time.perf_counter()
-        # amortize the batched span back to per-request detect events
-        dt = (t1 - t0) / B
-        for i, (rid, small, _, _) in enumerate(items):
-            self.log.log(rid, "detect", t0 + i * dt, t0 + (i + 1) * dt,
-                         payload_bytes=small.nbytes, batch_size=B)
+        t3 = time.perf_counter()
+        crop_bytes = sum(f.nbytes for faces in faces_per for f in faces)
+        self.log.log_batch_span(rids, "pre_crop", t2, t3,
+                                payload_bytes=crop_bytes, split_payload=True)
         # boundary bytes: padded frame stack up, heatmaps down (both
         # paths); the unfused path pays the crop->thumbnail resize
         # round trip on top
@@ -267,13 +294,11 @@ class StreamingPipeline:
                 self._log_batch_transfers(batch, "embed",
                                           h2d=Bp * stack[0].nbytes,
                                           d2h=Bp * facerec.EMBED_DIM * 4)
-            dt = (t1 - t0) / B
-            results = []
-            for i, ((rid, face, _), (name, sim)) in enumerate(
-                    zip(batch, named)):
-                self.log.log(rid, "identify", t0 + i * dt, t0 + (i + 1) * dt,
-                             payload_bytes=face.nbytes, batch_size=B)
-                results.append((rid, name, sim))
+            self.log.log_batch_span([rid for rid, _, _ in batch],
+                                    "identify", t0, t1,
+                                    payload_bytes=stack[0].nbytes)
+            results = [(rid, name, sim) for (rid, _, _), (name, sim)
+                       in zip(batch, named)]
             with self._ident_lock:
                 self.identities.extend(results)
         self._merge_stats("identify", batcher.stats)

@@ -14,7 +14,30 @@ from dataclasses import dataclass
 import jax
 import numpy as np
 
-from repro.core.events import EventLog
+from repro.core.events import EventLog, five_way_fractions
+
+
+def taxed_stage_category(stage: str) -> str:
+    """TaxedStep stage name -> five-way bucket.
+
+    The step's own stages are suffix-typed (``<name>/pre``,
+    ``<name>/h2d``, ``<name>/compute``, ``<name>/d2h``,
+    ``<name>/post``); queue waits logged alongside (``wait``/``reject``
+    or a ``/wait`` suffix) land in ``queue``. This is the attribution
+    the paper-figure benchmarks consume instead of hard-coded stage
+    lists (``fig06``/``fig08``).
+    """
+    if stage.endswith("/compute"):
+        return "ai"
+    if stage.endswith(("/h2d", "/d2h")):
+        return "transfer"
+    if stage.endswith("/pre"):
+        return "pre"
+    if stage.endswith("/post"):
+        return "post"
+    if "wait" in stage or stage == "reject":
+        return "queue"
+    return "pre"
 
 
 @dataclass
@@ -53,6 +76,7 @@ class TaxedStep:
 
     def breakdown(self) -> dict:
         per = self.log.breakdown()
+        fr = five_way_fractions(per, taxed_stage_category)
         compute = sum(v for k, v in per.items() if k.endswith("/compute"))
         transfer = sum(v for k, v in per.items()
                        if k.endswith(("/h2d", "/d2h")))
@@ -61,6 +85,9 @@ class TaxedStep:
                 "ai_fraction": compute / total if total else 0.0,
                 "tax_fraction": 1 - (compute / total if total else 0.0),
                 "transfer_fraction": transfer / total if total else 0.0,
+                "fractions": fr,
+                "pre_fraction": fr["pre"],
+                "post_fraction": fr["post"],
                 "transfer_bytes": self.log.transfer_bytes()}
 
 

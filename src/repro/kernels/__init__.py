@@ -1,3 +1,12 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernel layer (optional substrate).
+
+Compute hot-spots the paper's workloads motivate get a custom kernel
+here — attention (flash/decode), linear scans (Mamba/RWKV), matmul
+with fused epilogues, bilinear resize, and the pre/post-processing set
+(``preproc``: YUV decode, fused letterbox+normalize, pairwise IoU).
+Every op is reachable through :mod:`repro.kernels.ops`, which
+dispatches between ``ref`` (pure-jnp oracle), ``xla`` (memory-bounded
+JAX, lowers anywhere), and ``pallas`` (TPU kernels, ``interpret=True``
+on CPU); tilings resolve through the persistent autotune cache
+(:mod:`repro.kernels.autotune`).
+"""

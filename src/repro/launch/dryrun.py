@@ -1,7 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# The two lines above MUST run before any other import (jax locks the
-# device count on first init). Everything below is ordinary code.
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
 For each cell this proves the distribution config is coherent on the
@@ -14,6 +10,10 @@ Usage:
   python -m repro.launch.dryrun --arch llama3-8b --shape decode_32k --multi-pod
   python -m repro.launch.dryrun --all [--multi-pod] [--variant baseline]
 """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax-importing module (jax
+# locks the device count on first init). Everything below is ordinary.
 import argparse
 import json
 import sys

@@ -1,0 +1,25 @@
+"""Pre/post-processing tax subsystem (paper §4.3 / Figs 6 & 8).
+
+The last unreproduced pillar of the paper: once the AI stages are
+accelerated, the decode / resize / normalize / NMS / serialization work
+*around* them dominates. This package makes that work a first-class,
+placement-switchable stage instead of host-side glue:
+
+  * ``host``   — NumPy baselines (the measured CPU deployment);
+  * ``device`` — jitted programs + Pallas kernels
+    (:mod:`repro.kernels.preproc`) for the same math;
+  * ``stage``  — :class:`PreprocessStage`, the ``placement=
+    "host"|"device"`` API the streaming pipeline, the fused
+    identifier, and the serving cluster all consume via
+    ``facerec.build_identify_stack``.
+
+``benchmarks/fig_preprocess_offload.py`` sweeps acceleration ×
+placement over this package to reproduce the Fig 6/8 story from
+executed runs: the pre/post tax fraction grows under host placement
+and collapses when the stage moves on-device.
+"""
+from repro.preprocess.stage import (
+    DetectPostConfig, NormSpec, PreprocessStage,
+)
+
+__all__ = ["DetectPostConfig", "NormSpec", "PreprocessStage"]

@@ -1,0 +1,196 @@
+"""Host-side (NumPy) pre/post-processing baselines.
+
+These are the reference implementations of the pre/post-processing tax:
+planar YUV decode, letterbox resize + normalization, and detection
+post-processing (score threshold + greedy IoU NMS). They are what a
+CPU-bound deployment actually runs — the paper's Fig 8 "supporting
+code" — and the oracle the device programs in
+:mod:`repro.preprocess.device` must match.
+
+Numeric discipline: every float op runs in float32 with the same
+expression order as the device path, so host/device NMS *decisions*
+(comparisons against thresholds) are bit-identical, not merely close.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+# BT.601 full-range YUV <-> RGB (the classic JPEG/video matrix).
+_YUV_TO_RGB = np.array([[1.0, 0.0, 1.402],
+                        [1.0, -0.344136, -0.714136],
+                        [1.0, 1.772, 0.0]], np.float32)
+_RGB_TO_YUV = np.array([[0.299, 0.587, 0.114],
+                        [-0.168736, -0.331264, 0.5],
+                        [0.5, -0.418688, -0.081312]], np.float32)
+
+
+def rgb_to_yuv(rgb: np.ndarray) -> np.ndarray:
+    """(..., H, W, 3) uint8 RGB -> (..., 3, H, W) planar uint8 YUV.
+
+    The *encoder* — it emulates what the camera/codec put on the wire,
+    so it is deliberately not part of any taxed stage; the pipeline's
+    taxed pre-processing starts at :func:`yuv_to_rgb`.
+    """
+    x = rgb.astype(np.float32)
+    yuv = x @ _RGB_TO_YUV.T
+    yuv[..., 1:] += 128.0
+    yuv = np.clip(np.round(yuv), 0, 255).astype(np.uint8)
+    return np.moveaxis(yuv, -1, -3)
+
+
+def yuv_to_rgb(yuv: np.ndarray) -> np.ndarray:
+    """(..., 3, H, W) planar uint8 YUV -> (..., H, W, 3) uint8 RGB.
+
+    Frame decode-emulation (4:4:4 planes): the per-pixel 3x3 color
+    transform every decoded frame pays before any AI sees it.
+    """
+    x = np.moveaxis(yuv, -3, -1).astype(np.float32)
+    x = x - np.array([0.0, 128.0, 128.0], np.float32)
+    rgb = x @ _YUV_TO_RGB.T.astype(np.float32)
+    return np.clip(np.round(rgb), 0, 255).astype(np.uint8)
+
+
+def interp_matrix(out_n: int, in_n: int) -> np.ndarray:
+    """Bilinear interpolation operator rows (align_corners=False).
+
+    One implementation for the whole repo:
+    :func:`repro.kernels.resize._interp_matrix` is the canonical owner
+    (the Pallas resize, the FusedIdentifier fold, and this letterbox
+    all build from it), so the resize convention cannot fork.
+    """
+    from repro.kernels.resize import _interp_matrix
+    return _interp_matrix(out_n, in_n)
+
+
+def letterbox_geometry(in_h: int, in_w: int, out_h: int, out_w: int,
+                       ) -> tuple[int, int, int, int]:
+    """(content_h, content_w, top, left): aspect-preserving fit + center.
+
+    ``r = min(out_h/in_h, out_w/in_w)`` — the shared scale that makes
+    letterboxing aspect-safe; the remainder of the canvas is padding.
+    """
+    r = min(out_h / in_h, out_w / in_w)
+    ch = max(1, min(out_h, round(in_h * r)))
+    cw = max(1, min(out_w, round(in_w * r)))
+    return ch, cw, (out_h - ch) // 2, (out_w - cw) // 2
+
+
+@functools.lru_cache(maxsize=64)
+def embedded_interp_matrices(in_h: int, in_w: int, out_h: int, out_w: int,
+                             ) -> tuple[np.ndarray, np.ndarray]:
+    """Letterbox-embedded operators ``Ly (out_h, in_h)``, ``Lx (out_w,
+    in_w)``: interpolation rows land on the content window, zero rows
+    elsewhere — so ``Ly @ img @ Lx^T`` is the letterboxed resize with
+    zeros in the pad region, ready for a mask/affine epilogue.
+
+    Cached per geometry (read-only consumers): a per-frame ingest loop
+    must not pay operator construction inside the taxed resize span —
+    a real deployment hoists this setup out of the hot path."""
+    ch, cw, top, left = letterbox_geometry(in_h, in_w, out_h, out_w)
+    ly = np.zeros((out_h, in_h), np.float32)
+    ly[top:top + ch] = interp_matrix(ch, in_h)
+    lx = np.zeros((out_w, in_w), np.float32)
+    lx[left:left + cw] = interp_matrix(cw, in_w)
+    return ly, lx
+
+
+def letterbox_normalize(img: np.ndarray, out_h: int, out_w: int, *,
+                        scale: np.ndarray, offset: np.ndarray,
+                        pad_value: float = 0.0) -> np.ndarray:
+    """(B, H, W, C) any-real -> (B, out_h, out_w, C) float32.
+
+    Aspect-preserving bilinear resize into a centered content window,
+    per-channel affine normalization ``x * scale + offset`` on the
+    content, ``pad_value`` (already in normalized units) outside it —
+    the host baseline of the fused device program.
+    """
+    B, H, W, C = img.shape
+    ly, lx = embedded_interp_matrices(H, W, out_h, out_w)
+    x = img.astype(np.float32)
+    # (B, C, out_h, out_w) = Ly @ img @ Lx^T per plane
+    t = np.einsum("oh,bhwc,pw->bcop", ly, x, lx, optimize=True)
+    s = np.asarray(scale, np.float32)[None, :, None, None]
+    o = np.asarray(offset, np.float32)[None, :, None, None]
+    out = t * s + o
+    out = np.where(_content_mask(H, W, out_h, out_w)[None, None], out,
+                   np.float32(pad_value))
+    return np.moveaxis(out, 1, -1)
+
+
+@functools.lru_cache(maxsize=64)
+def _content_mask(in_h: int, in_w: int, out_h: int, out_w: int,
+                  ) -> np.ndarray:
+    ch, cw, top, left = letterbox_geometry(in_h, in_w, out_h, out_w)
+    mask = np.zeros((out_h, out_w), bool)
+    mask[top:top + ch, left:left + cw] = True
+    return mask
+
+
+def iou_matrix(boxes: np.ndarray) -> np.ndarray:
+    """(N, 4) float32 [y0, x0, y1, x1] -> (N, N) float32 pairwise IoU.
+
+    Expression order matches :func:`repro.preprocess.device.iou_matrix`
+    exactly (float32 IEEE ops), so threshold comparisons agree bitwise.
+    """
+    b = boxes.astype(np.float32)
+    y0, x0, y1, x1 = b[:, 0], b[:, 1], b[:, 2], b[:, 3]
+    area = (y1 - y0) * (x1 - x0)
+    ih = np.maximum(
+        np.float32(0.0),
+        np.minimum(y1[:, None], y1[None, :])
+        - np.maximum(y0[:, None], y0[None, :]))
+    iw = np.maximum(
+        np.float32(0.0),
+        np.minimum(x1[:, None], x1[None, :])
+        - np.maximum(x0[:, None], x0[None, :]))
+    inter = ih * iw
+    union = area[:, None] + area[None, :] - inter
+    return inter / np.maximum(union, np.float32(1e-12))
+
+
+def nms(boxes: np.ndarray, scores: np.ndarray, *,
+        iou_thresh: float = 0.5, score_thresh: float = 0.0,
+        max_out: int | None = None) -> list[int]:
+    """Greedy IoU NMS -> kept indices (into the input), best-first.
+
+    Ties are broken by index (stable descending sort), matching the
+    device path. ``score_thresh`` filters before suppression;
+    ``max_out`` caps the number of survivors.
+    """
+    boxes = np.asarray(boxes, np.float32).reshape(-1, 4)
+    scores = np.asarray(scores, np.float32).reshape(-1)
+    order = np.argsort(-scores, kind="stable")
+    alive = scores[order] >= np.float32(score_thresh)
+    iou = iou_matrix(boxes[order])
+    thr = np.float32(iou_thresh)
+    keep: list[int] = []
+    for i in range(len(order)):
+        if not alive[i]:
+            continue
+        keep.append(int(order[i]))
+        if max_out is not None and len(keep) >= max_out:
+            break
+        alive[i + 1:] &= ~(iou[i, i + 1:] > thr)
+    return keep
+
+
+def topk_boxes_from_heatmap(hm: np.ndarray, k: int, *, box_cells: float,
+                            ) -> tuple[np.ndarray, np.ndarray]:
+    """Dense heatmap -> top-k candidate boxes + scores (cell units).
+
+    Candidates are the k highest cells (stable flat-index tie-break,
+    same selection as the device's full stable argsort), each expanded
+    to a ``box_cells``-sided box around the cell center. Thresholding
+    and suppression are NMS's job, not this function's.
+    """
+    Hc, Wc = hm.shape
+    flat = hm.astype(np.float32).reshape(-1)
+    k = min(k, flat.size)
+    idx = np.argsort(-flat, kind="stable")[:k]
+    cy = (idx // Wc).astype(np.float32) + np.float32(0.5)
+    cx = (idx % Wc).astype(np.float32) + np.float32(0.5)
+    h = np.float32(box_cells / 2.0)
+    boxes = np.stack([cy - h, cx - h, cy + h, cx + h], axis=1)
+    return boxes, flat[idx]

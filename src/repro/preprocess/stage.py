@@ -1,0 +1,223 @@
+"""PreprocessStage: placement-switchable pre/post-processing with tax
+accounting.
+
+One object owns everything that happens around the AI kernels of the
+face pipeline — decode-emulation (planar YUV -> RGB), letterbox resize
++ normalization, and detection post-processing (score threshold +
+greedy IoU NMS) — behind a single ``placement`` switch:
+
+  * ``placement="host"``   — the NumPy baselines
+    (:mod:`repro.preprocess.host`): the paper's measured deployment,
+    where this work rides the CPU and becomes the dominant tax once
+    the AI is accelerated;
+  * ``placement="device"`` — the jitted/Pallas programs
+    (:mod:`repro.preprocess.device`): the offload the paper argues
+    for, with the host<->device boundary bytes logged as transfer
+    events.
+
+Every call logs per-request events into the attached
+:class:`repro.core.events.EventLog` under ``pre_*``/``post_*`` stage
+names, which the five-way attribution
+(:func:`repro.core.events.EventLog.five_way`) buckets into {pre, ai,
+post, transfer, queue}. Batched calls amortize the span per item, the
+same discipline as the streaming pipeline's AI stages
+(docs/ai_tax_accounting.md).
+
+The stage also owns the pipeline's normalization constants
+(:class:`NormSpec`): the detector's frame norm and the identify
+stage's crop norm. ``repro.core.facerec.Embedder`` and
+``FusedIdentifier`` both derive their normalization from the stage's
+``crop_norm``, so the host path and the fused device fold can never
+apply different constants.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.events import EventLog
+from repro.preprocess import host as _host
+
+
+@dataclass(frozen=True)
+class NormSpec:
+    """Per-channel affine normalization ``x_norm = x * scale + offset``.
+
+    Expressed in the familiar (mean, std, to_unit) vocabulary:
+    ``to_unit`` first maps 0..255 to 0..1, then ``(x - mean) / std``.
+    The default is the identity (uint8 scale preserved) — what the
+    detector's brightness threshold expects; the identify stage uses
+    ``NormSpec(to_unit=True)``, i.e. the historical ``/255``.
+    """
+    mean: tuple = (0.0, 0.0, 0.0)
+    std: tuple = (1.0, 1.0, 1.0)
+    to_unit: bool = False
+
+    @property
+    def scale(self) -> np.ndarray:
+        base = 255.0 if self.to_unit else 1.0
+        return (1.0 / (base * np.asarray(self.std, np.float64))) \
+            .astype(np.float32)
+
+    @property
+    def offset(self) -> np.ndarray:
+        return (-np.asarray(self.mean, np.float64)
+                / np.asarray(self.std, np.float64)).astype(np.float32)
+
+    @property
+    def is_identity(self) -> bool:
+        return (not self.to_unit and all(m == 0.0 for m in self.mean)
+                and all(s == 1.0 for s in self.std))
+
+
+@dataclass(frozen=True)
+class DetectPostConfig:
+    """Detection post-processing knobs (heatmap-cell units).
+
+    ``box_cells``/``iou_thresh`` are sized so greedy NMS reproduces the
+    classic peak-extraction suppression window (a kept peak silences
+    candidates within ~±3 cells); ``score_thresh`` is the same
+    brightness bar ``facerec.detect_faces`` uses.
+    """
+    score_thresh: float = 60.0
+    iou_thresh: float = 0.12
+    box_cells: float = 6.0
+    max_candidates: int = 32
+    max_faces: int = 5
+
+
+class PreprocessStage:
+    """Placement-switchable decode / letterbox / NMS with event logging.
+
+    ``log`` may be attached after construction (the pipeline builds the
+    stage through ``facerec.build_identify_stack`` and then points it
+    at its own log); without one, calls still run, just unaccounted.
+    """
+
+    def __init__(self, placement: str = "host", *,
+                 frame_norm: NormSpec | None = None,
+                 crop_norm: NormSpec | None = None,
+                 post: DetectPostConfig | None = None,
+                 log: EventLog | None = None):
+        if placement not in ("host", "device"):
+            raise ValueError(f"placement must be host|device, got "
+                             f"{placement!r}")
+        self.placement = placement
+        self.frame_norm = frame_norm or NormSpec()
+        self.crop_norm = crop_norm or NormSpec(to_unit=True)
+        self.post = post or DetectPostConfig()
+        self.log = log
+
+    # ---- accounting helpers ----------------------------------------------
+
+    def _log_span(self, stage: str, rids, t0: float, t1: float,
+                  payload_bytes: int) -> None:
+        """Amortize one batched span into per-request events
+        (EventLog.log_batch_span, tagged with this stage's placement)."""
+        if self.log is None:
+            return
+        self.log.log_batch_span(rids, stage, t0, t1, payload_bytes,
+                                split_payload=True,
+                                placement=self.placement)
+
+    def _log_transfers(self, rids, boundary: str, h2d: int,
+                       d2h: int) -> None:
+        if self.log is None or self.placement != "device":
+            return
+        self.log.log_batch_transfers(rids, boundary, h2d, d2h)
+
+    # ---- pre-processing ---------------------------------------------------
+
+    def decode(self, yuv: np.ndarray, rids=None) -> np.ndarray:
+        """(B, 3, H, W) planar uint8 YUV -> (B, H, W, 3) uint8 RGB."""
+        rids = list(rids) if rids is not None else list(range(len(yuv)))
+        t0 = time.perf_counter()
+        if self.placement == "host":
+            rgb = _host.yuv_to_rgb(yuv)
+        else:
+            from repro.preprocess import device
+            import jax.numpy as jnp
+            rgb = np.asarray(device.yuv_to_rgb(jnp.asarray(yuv)))
+        self._log_span("pre_decode", rids, t0, time.perf_counter(),
+                       yuv.nbytes)
+        self._log_transfers(rids, "pre_decode", yuv.nbytes, rgb.nbytes)
+        return rgb
+
+    def letterbox(self, frames: np.ndarray, out_h: int, out_w: int,
+                  rids=None, *, pad_value: float = 0.0) -> np.ndarray:
+        """(B, H, W, C) -> (B, out_h, out_w, C) float32, frame-normed."""
+        rids = list(rids) if rids is not None else list(range(len(frames)))
+        n = self.frame_norm
+        t0 = time.perf_counter()
+        if self.placement == "host":
+            out = _host.letterbox_normalize(
+                frames, out_h, out_w, scale=n.scale, offset=n.offset,
+                pad_value=pad_value)
+        else:
+            from repro.preprocess import device
+            import jax.numpy as jnp
+            out = np.asarray(device.letterbox_normalize(
+                jnp.asarray(frames), out_h, out_w, scale=n.scale,
+                offset=n.offset, pad_value=pad_value))
+        self._log_span("pre_letterbox", rids, t0, time.perf_counter(),
+                       frames.nbytes)
+        self._log_transfers(rids, "pre_letterbox", frames.nbytes, out.nbytes)
+        return out
+
+    def ingest(self, yuv: np.ndarray, out_h: int, out_w: int,
+               rids=None) -> np.ndarray:
+        """Decode + letterbox, the full taxed ingest path."""
+        return self.letterbox(self.decode(yuv, rids), out_h, out_w, rids)
+
+    # ---- post-processing --------------------------------------------------
+
+    def postprocess(self, hms: np.ndarray, pool: int, rids=None,
+                    ) -> list[list[tuple[int, int]]]:
+        """(B, Hc, Wc) detection heatmaps -> face centers per frame.
+
+        Threshold + greedy IoU NMS over top-k candidate cells; centers
+        come back in full-resolution coordinates (``cell * pool +
+        pool//2``), best-first — the same contract as
+        ``facerec.detect_faces_batch``. Host and device placements make
+        bit-identical keep decisions.
+        """
+        rids = list(rids) if rids is not None else list(range(len(hms)))
+        p = self.post
+        t0 = time.perf_counter()
+        centers: list[list[tuple[int, int]]] = []
+        if self.placement == "host":
+            for hm in hms:
+                boxes, scores = _host.topk_boxes_from_heatmap(
+                    hm, p.max_candidates, box_cells=p.box_cells)
+                keep = _host.nms(boxes, scores, iou_thresh=p.iou_thresh,
+                                 score_thresh=p.score_thresh,
+                                 max_out=p.max_faces)
+                centers.append(self._centers(boxes[keep], pool))
+        else:
+            from repro.preprocess import device
+            boxes, scores, keep = device.postprocess_heatmaps(
+                hms, k=p.max_candidates, box_cells=p.box_cells,
+                score_thresh=p.score_thresh, iou_thresh=p.iou_thresh,
+                max_out=p.max_faces)
+            for b in range(len(hms)):
+                centers.append(self._centers(boxes[b][keep[b]], pool))
+            out_bytes = boxes.nbytes + scores.nbytes + keep.nbytes
+            # padding included — the pow2-padded heatmap rows cross too
+            # (same convention as every other batched boundary)
+            Bp = 1 << (len(hms) - 1).bit_length()
+            self._log_transfers(rids, "post_nms", Bp * hms[0].nbytes,
+                                out_bytes)
+        self._log_span("post_nms", rids, t0, time.perf_counter(), hms.nbytes)
+        return centers
+
+    @staticmethod
+    def _centers(kept_boxes: np.ndarray, pool: int,
+                 ) -> list[tuple[int, int]]:
+        out = []
+        for y0, x0, y1, x1 in np.asarray(kept_boxes, np.float32):
+            cy = int((y0 + y1) / 2.0 - 0.5)     # back to the cell index
+            cx = int((x0 + x1) / 2.0 - 0.5)
+            out.append((cy * pool + pool // 2, cx * pool + pool // 2))
+        return out
