@@ -9,6 +9,12 @@
 #                      bans new deps — requirements-dev.txt has it)
 #   make bench-smoke - fast benchmark subset, proves the harness runs
 #   make cluster-smoke - CI-sized measured-vs-modeled cluster overlay
+#   make faults-smoke - CI-sized fault-injection battery: kill-revive /
+#                      drive-drop recovery, degraded-knee cross-check,
+#                      autoscaler rescue (RuntimeError on gate failure)
+#   make bench-diff  - compare working-tree BENCH_*.json against HEAD's
+#                      committed baseline (direction-aware tolerances;
+#                      exits 1 on a gated regression)
 #   make calibrate   - cost model vs XLA cost_analysis() on the fixture
 #                      battery (gates dot-FLOP agreement at 5%)
 #   make docs-check  - docs lint + figure-registry sync: required docs
@@ -29,9 +35,9 @@
 #                      hot-path shape battery
 #   make autotune-check - assert the committed cache is in sync with
 #                      what the sweep produces (CI runs this)
-.PHONY: test coverage bench-smoke cluster-smoke preprocess-smoke \
-	calibrate docs-lint docs-check des-golden autotune autotune-check \
-	check
+.PHONY: test coverage bench-smoke cluster-smoke faults-smoke \
+	preprocess-smoke bench-diff calibrate docs-lint docs-check \
+	des-golden autotune autotune-check check
 
 PY := PYTHONPATH=src python
 
@@ -59,6 +65,12 @@ bench-smoke:
 cluster-smoke:
 	$(PY) -m benchmarks.fig_cluster_scaling --smoke
 
+faults-smoke:
+	$(PY) -m benchmarks.fig_fault_recovery --smoke
+
+bench-diff:
+	$(PY) scripts/bench_diff.py
+
 preprocess-smoke:
 	$(PY) -m benchmarks.fig_preprocess_offload --smoke
 
@@ -79,4 +91,5 @@ autotune:
 autotune-check:
 	$(PY) scripts/autotune.py --check
 
-check: test bench-smoke preprocess-smoke docs-check autotune-check
+check: test bench-smoke faults-smoke preprocess-smoke docs-check \
+	autotune-check

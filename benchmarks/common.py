@@ -1,7 +1,15 @@
-"""Shared benchmark plumbing: timing + CSV row helpers."""
+"""Shared benchmark plumbing: timing, CSV row helpers, BENCH recorder."""
 from __future__ import annotations
 
+import json
+import pathlib
 import time
+
+# Repo-root file the cluster benchmarks merge their gateable scalars
+# into; ``scripts/bench_diff.py`` compares the working tree's copy
+# against HEAD's so perf/recovery regressions show up in review.
+BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent \
+    / "BENCH_cluster.json"
 
 
 def timed(fn, *args, repeat: int = 1, **kw):
@@ -16,3 +24,49 @@ def timed(fn, *args, repeat: int = 1, **kw):
 
 def row(name: str, us: float, derived) -> str:
     return f"{name},{us:.1f},{derived}"
+
+
+class BenchRecorder:
+    """Accumulates one benchmark's scalar metrics and merges them into
+    the committed ``BENCH_cluster.json``.
+
+    Each metric carries its own regression policy:
+      * ``better`` — "higher"/"lower" for direction-aware gating, or
+        ``None`` for informational values diffed but never gated;
+      * ``tol``   — relative drift allowed in the bad direction before
+        ``bench_diff`` fails;
+      * ``gate``  — set ``False`` for noisy values (live-cluster
+        timings on a shared box) that should be visible in diffs but
+        must not block CI.
+
+    Sections are stamped with the ``mode`` they ran under (smoke/full);
+    the differ only compares sections whose modes match, so a local
+    full run never gets graded against CI's smoke baseline.
+    """
+
+    def __init__(self, section: str, mode: str = "full",
+                 path: pathlib.Path | str | None = None):
+        self.section = section
+        self.mode = mode
+        self.path = pathlib.Path(path) if path else BENCH_PATH
+        self.metrics: dict[str, dict] = {}
+
+    def record(self, name: str, value, better: str | None = None,
+               tol: float = 0.25, gate: bool = True) -> None:
+        if better not in (None, "higher", "lower"):
+            raise ValueError(f"better must be higher/lower/None: {better!r}")
+        self.metrics[name] = {
+            "value": round(float(value), 6),
+            "better": better,
+            "tol": tol,
+            "gate": bool(gate and better is not None),
+        }
+
+    def flush(self) -> pathlib.Path:
+        data = {}
+        if self.path.exists():
+            data = json.loads(self.path.read_text())
+        data[self.section] = {"mode": self.mode, "metrics": self.metrics}
+        self.path.write_text(json.dumps(data, indent=2, sort_keys=True)
+                             + "\n")
+        return self.path

@@ -20,20 +20,25 @@ from __future__ import annotations
 
 import argparse
 
-from benchmarks.common import row, timed
+from benchmarks.common import BenchRecorder, row, timed
 from repro.cluster.cluster import ClusterSpec, ServingCluster
 from repro.cluster.crossval import DES_TOL, LIVE_TOL, des_knee, knee_comparison
 from repro.core import tco
 from repro.core.broker import BrokerConfig
 
 
-def _live_rows(smoke: bool) -> list[str]:
+def _live_rows(smoke: bool, rec: BenchRecorder) -> list[str]:
     out = []
     speedups = (4.0,) if smoke else (1.0, 4.0, 6.0, 9.0)
     sim_time = 3.0 if smoke else 6.0
     for s in speedups:
         spec = ClusterSpec(speedup=s, sim_time=sim_time, warmup=1.0)
         res, us = timed(ServingCluster(spec).run)
+        # live numbers are diffable but never CI-gating (shared box)
+        rec.record(f"live.S{s:g}.p99_s", res.latency.p99, better="lower",
+                   gate=False)
+        rec.record(f"live.S{s:g}.throughput", res.throughput,
+                   better="higher", gate=False)
         out.append(row(
             f"cluster/R{spec.n_replicas}_d1_S{s:g}", us,
             f"p50_ms={res.latency.p50*1e3:.0f};"
@@ -48,7 +53,7 @@ def _live_rows(smoke: bool) -> list[str]:
     return out
 
 
-def _knee_rows(smoke: bool) -> list[str]:
+def _knee_rows(smoke: bool, rec: BenchRecorder) -> list[str]:
     out = []
     configs = ((1, 8),) if smoke else ((1, 8), (2, 10))
     for drives, replicas in configs:
@@ -58,13 +63,17 @@ def _knee_rows(smoke: bool) -> list[str]:
         cmp_, us = timed(knee_comparison, spec,
                          des_iters=4 if smoke else 6,
                          live_iters=2 if smoke else 4)
+        rec.record(f"knee.R{replicas}_d{drives}.des", cmp_.des,
+                   better="higher", tol=DES_TOL)
+        rec.record(f"knee.R{replicas}_d{drives}.live", cmp_.live,
+                   better="higher", gate=False)
         out.append(row(f"knee/{cmp_.row().split(':')[0]}", us,
                        cmp_.row().split(":", 1)[1]
                        + f";tol_des={DES_TOL};tol_live={LIVE_TOL}"))
     return out
 
 
-def _tco_rows(smoke: bool) -> list[str]:
+def _tco_rows(smoke: bool, rec: BenchRecorder) -> list[str]:
     drives = (1, 2) if smoke else (1, 2, 3, 4)
     target = 12.0 if smoke else 32.0
     knees = {}
@@ -101,11 +110,19 @@ def _tco_rows(smoke: bool) -> list[str]:
                     f"${paper.homogeneous.equipment_cost:,.0f};"
                     f"matches_paper={match}")
     out.append(row("tco/measured_provisioning", us, derived))
+    for k, v in knees.items():
+        rec.record(f"tco.knee_d{k}", v, better="higher", tol=DES_TOL)
+    rec.record("tco.saving_fraction", comp.saving_fraction,
+               better="higher", tol=0.10)
     return out
 
 
 def run(smoke: bool = False) -> list[str]:
-    return _live_rows(smoke) + _knee_rows(smoke) + _tco_rows(smoke)
+    rec = BenchRecorder("cluster_scaling", mode="smoke" if smoke else "full")
+    out = (_live_rows(smoke, rec) + _knee_rows(smoke, rec)
+           + _tco_rows(smoke, rec))
+    rec.flush()
+    return out
 
 
 if __name__ == "__main__":

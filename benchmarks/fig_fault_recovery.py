@@ -1,0 +1,156 @@
+"""Fault injection, recovery tax, and elastic autoscaling (the
+availability-side counterpart of the steady-state cluster benchmark).
+Four sections:
+
+  * ``recover/…`` — DES runs carrying a seeded fault timeline
+    (kill-revive of 3/8 replicas; a drive dropped from every broker at
+    an S between the degraded and healthy knees): windowed-p99 spike
+    over the pre-fault baseline, time back under 1.5x baseline after
+    repair, and backlog drain time, from ``repro.core.metrics.
+    recovery_report``;
+  * ``knee/…``    — cross-validation gate: the knee measured by DES
+    bisection WITH a persistent drive-drop fault must agree with the
+    closed form of the statically degraded spec within ``DES_TOL``
+    (RuntimeError on failure — same contract as fig_cluster_scaling);
+  * ``live/…``    — the SAME kill-revive timeline replayed against the
+    real threaded ``ServingCluster``; informational (wall-clock noise)
+    but the requeue accounting and recovery shape must exist;
+  * ``autoscale/…`` — an underprovisioned cluster (2 replicas where
+    the closed form needs ~6) rescued by the SLO/backlog controller;
+    a diverged verdict here is a RuntimeError, not a data point.
+
+Gateable scalars land in ``BENCH_cluster.json`` (section
+``fault_recovery``) for ``scripts/bench_diff.py``. ``--smoke``
+shrinks horizons for CI; same code paths throughout.
+"""
+from __future__ import annotations
+
+import argparse
+from dataclasses import replace
+
+from benchmarks.common import BenchRecorder, row, timed
+from repro.cluster.autoscaler import AutoscalerConfig
+from repro.cluster.cluster import ClusterSpec, ServingCluster
+from repro.cluster.crossval import DES_TOL, fault_knees
+from repro.cluster.faults import FaultPlan
+from repro.core.broker import BrokerConfig
+from repro.core.metrics import recovery_report
+
+
+def _des_recovery_rows(smoke: bool, rec: BenchRecorder) -> list[str]:
+    out = []
+    sim_time, warmup = (10.0, 2.0) if smoke else (20.0, 4.0)
+    # kill-revive: 3 of 8 consumers die mid-run, fresh members join
+    t_kill, t_rev = (3.07, 5.0) if smoke else (6.0, 10.0)
+    spec = ClusterSpec(speedup=4.0,
+                       fault_plan=FaultPlan.kill_revive(t_kill, t_rev, n=3))
+    sim = spec.des_sim(sim_time=sim_time, warmup=warmup)
+    r, us = timed(sim.run)
+    rep = recovery_report(sim.completions, t_kill, t_rev, window_s=0.5,
+                          depth_samples=sim.depth_samples)
+    out.append(row(
+        "recover/des_kill_revive", us,
+        f"requeues={r.requeues};spike_x="
+        f"{rep.spike_p99 / rep.baseline_p99:.1f};"
+        f"recovery_s={rep.recovery_s:.2f};drain_s={rep.drain_s:.2f};"
+        f"thr={r.throughput:.0f}/s;diverged={r.diverged}"))
+    rec.record("des_kill_revive.recovery_s", rep.recovery_s, better="lower")
+    rec.record("des_kill_revive.drain_s", rep.drain_s, better="lower")
+    rec.record("des_kill_revive.spike_p99", rep.spike_p99, better="lower",
+               tol=0.5)
+    rec.record("des_kill_revive.requeues", r.requeues)
+    rec.record("des_kill_revive.throughput", r.throughput, better="higher",
+               tol=0.10)
+
+    # drive-drop: run between the degraded and healthy storage knees,
+    # so the outage window is unstable and the repaired system drains
+    t_drop, t_fix = (3.0, 5.0) if smoke else (5.0, 9.0)
+    dspec = ClusterSpec(bk=BrokerConfig(drives_per_broker=2), speedup=9.0,
+                        fault_plan=FaultPlan.drive_drop(t_drop, t_fix))
+    dsim = dspec.des_sim(sim_time=sim_time, warmup=warmup)
+    dr, us = timed(dsim.run)
+    drep = recovery_report(dsim.completions, t_drop, t_fix, window_s=0.5,
+                           depth_samples=dsim.depth_samples)
+    out.append(row(
+        "recover/des_drive_drop", us,
+        f"spike_x={drep.spike_p99 / drep.baseline_p99:.1f};"
+        f"recovery_s={drep.recovery_s:.2f};thr={dr.throughput:.0f}/s;"
+        f"diverged={dr.diverged}"))
+    rec.record("des_drive_drop.recovery_s", drep.recovery_s, better="lower")
+    rec.record("des_drive_drop.spike_p99", drep.spike_p99, better="lower",
+               tol=0.5)
+    return out
+
+
+def _knee_rows(smoke: bool, rec: BenchRecorder) -> list[str]:
+    spec = ClusterSpec(bk=BrokerConfig(drives_per_broker=2))
+    degraded = replace(spec, bk=BrokerConfig(drives_per_broker=1))
+    fk, us = timed(fault_knees, spec, FaultPlan.drive_drop(2.0), degraded,
+                   iters=3 if smoke else 5,
+                   sim_time=10.0 if smoke else 20.0,
+                   warmup=2.0 if smoke else 4.0)
+    if not fk.agree:
+        raise RuntimeError(
+            f"degraded DES knee {fk.des_degraded:.2f} fails the "
+            f"{DES_TOL:.0%} gate against the statically degraded closed "
+            f"form {fk.closed_degraded:.2f}")
+    rec.record("knee.drive_drop_degraded", fk.des_degraded, better="higher",
+               tol=DES_TOL)
+    return [row("knee/drive_drop_d2_to_d1", us,
+                fk.row() + f";tol_des={DES_TOL}")]
+
+
+def _live_rows(smoke: bool, rec: BenchRecorder) -> list[str]:
+    spec = ClusterSpec(speedup=4.0, sim_time=4.0 if smoke else 6.0,
+                       warmup=1.0, fetch_max_wait_s=0.35,
+                       fault_plan=FaultPlan.kill_revive(1.2, 2.4, n=3))
+    res, us = timed(ServingCluster(spec).run)
+    rep = recovery_report(res.samples, 1.2, 2.4, window_s=0.5)
+    out = [row(
+        "live/kill_revive", us,
+        f"requeues={res.requeues};faults={len(res.faults)};"
+        f"recovery_s={rep.recovery_s:.2f};"
+        f"p99_ms={res.latency.p99 * 1e3:.0f};diverged={res.diverged}")]
+    # real threads on a shared box: diffable, never CI-gating
+    rec.record("live_kill_revive.recovery_s", rep.recovery_s,
+               better="lower", gate=False)
+    rec.record("live_kill_revive.requeues", res.requeues)
+    return out
+
+
+def _autoscale_rows(smoke: bool, rec: BenchRecorder) -> list[str]:
+    spec = ClusterSpec(
+        n_replicas=2, n_producers=4, n_partitions=12, speedup=4.0,
+        autoscale=AutoscalerConfig(min_replicas=2, max_replicas=12,
+                                   interval_s=0.25, cooldown_s=0.75))
+    sim = spec.des_sim(sim_time=12.0 if smoke else 20.0, warmup=2.0)
+    r, us = timed(sim.run)
+    if r.diverged:
+        raise RuntimeError("autoscaled run diverged: the controller "
+                           "failed to rescue the underprovisioned cluster")
+    first = sim.scale_actions[0].t if sim.scale_actions else float("inf")
+    out = [row(
+        "autoscale/des_rescue", us,
+        f"replicas=2->{r.final_consumers};actions={r.scale_events};"
+        f"first_action_s={first:.2f};thr={r.throughput:.0f}/s;"
+        f"diverged={r.diverged}")]
+    rec.record("autoscale.first_action_s", first, better="lower")
+    rec.record("autoscale.scale_events", r.scale_events)
+    rec.record("autoscale.final_consumers", r.final_consumers)
+    return out
+
+
+def run(smoke: bool = False) -> list[str]:
+    rec = BenchRecorder("fault_recovery", mode="smoke" if smoke else "full")
+    out = (_des_recovery_rows(smoke, rec) + _knee_rows(smoke, rec)
+           + _live_rows(smoke, rec) + _autoscale_rows(smoke, rec))
+    rec.flush()
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized runs (shorter horizons, fewer iters)")
+    args = ap.parse_args()
+    print("\n".join(run(smoke=args.smoke)))

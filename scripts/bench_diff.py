@@ -1,0 +1,107 @@
+"""Regression gate over the committed BENCH_*.json baselines.
+
+Compares every ``BENCH_*.json`` in the working tree against the copy
+committed at HEAD (``git show HEAD:<name>``). Each metric carries its
+own policy (written by ``benchmarks.common.BenchRecorder``):
+
+  * ``better: "higher"|"lower"`` + ``tol`` — fail when the new value
+    drifts past ``tol`` relative in the bad direction;
+  * ``gate: false`` or ``better: null`` — report the drift, never fail
+    (live-cluster numbers on a shared box, counters);
+
+Sections are only compared when their recorded ``mode`` (smoke/full)
+matches — a local full run is never graded against CI's smoke
+baseline. A file absent at HEAD passes with a notice (first commit of
+a new baseline). Exit 1 iff any gated metric regressed.
+
+Usage: PYTHONPATH=src python scripts/bench_diff.py [--ref HEAD]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _head_version(name: str, ref: str) -> dict | None:
+    proc = subprocess.run(["git", "show", f"{ref}:{name}"],
+                          cwd=ROOT, capture_output=True, text=True)
+    if proc.returncode != 0:
+        return None
+    return json.loads(proc.stdout)
+
+
+def _check_metric(key: str, old: dict, new: dict) -> tuple[bool, str]:
+    """Returns (regressed, human line)."""
+    ov, nv = old["value"], new["value"]
+    better, tol = new.get("better"), new.get("tol", 0.25)
+    gated = new.get("gate", False) and better is not None
+    if ov == 0:
+        drift = 0.0 if nv == 0 else float("inf")
+    else:
+        drift = (nv - ov) / abs(ov)
+    bad = (better == "higher" and drift < -tol) \
+        or (better == "lower" and drift > tol)
+    tag = "REGRESSED" if (bad and gated) else \
+        ("drift" if bad else "ok")
+    line = (f"  {key}: {ov:g} -> {nv:g} ({drift:+.1%})"
+            f" [{tag}{'' if gated else ', ungated'}]")
+    return bad and gated, line
+
+
+def diff_file(path: pathlib.Path, ref: str) -> tuple[int, list[str]]:
+    lines = [f"{path.name}:"]
+    base = _head_version(path.name, ref)
+    if base is None:
+        lines.append(f"  (absent at {ref} — new baseline, nothing to"
+                     " compare)")
+        return 0, lines
+    cur = json.loads(path.read_text())
+    regressions = 0
+    for section, body in sorted(cur.items()):
+        old_body = base.get(section)
+        if old_body is None:
+            lines.append(f"  [{section}] new section")
+            continue
+        if old_body.get("mode") != body.get("mode"):
+            lines.append(f"  [{section}] mode {old_body.get('mode')} !="
+                         f" {body.get('mode')} — skipped")
+            continue
+        for key, new in sorted(body["metrics"].items()):
+            old = old_body["metrics"].get(key)
+            if old is None:
+                lines.append(f"  {section}.{key}: new metric")
+                continue
+            bad, line = _check_metric(f"{section}.{key}", old, new)
+            regressions += bad
+            lines.append(line)
+    return regressions, lines
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ref", default="HEAD",
+                    help="git ref holding the baseline (default HEAD)")
+    args = ap.parse_args()
+    files = sorted(ROOT.glob("BENCH_*.json"))
+    if not files:
+        print("bench-diff: no BENCH_*.json in the working tree; nothing"
+              " to check")
+        return
+    total = 0
+    for path in files:
+        n, lines = diff_file(path, args.ref)
+        total += n
+        print("\n".join(lines))
+    if total:
+        print(f"bench-diff: {total} gated regression(s)")
+        sys.exit(1)
+    print("bench-diff: no gated regressions")
+
+
+if __name__ == "__main__":
+    main()

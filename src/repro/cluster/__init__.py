@@ -12,21 +12,32 @@ Modules:
   * ``scheduler`` — consumer-group partition assignment + rebalance;
   * ``topic``     — live partitions + paced broker write channels;
   * ``loadgen``   — open-loop (periodic/Poisson) and closed-loop load;
-  * ``metrics``   — percentiles, tail-latency SLOs, utilization report;
+  * ``metrics``   — percentiles, tail-latency SLOs, recovery windows;
   * ``cluster``   — the ServingCluster runtime tying them together;
+  * ``faults``    — central fault-injection engine: one deterministic
+    timeline (kill/revive, stall/restore, drive drop) driving both the
+    live cluster and the DES;
+  * ``autoscaler`` — queue-depth/SLO-driven elastic replica count
+    (hysteresis + cooldown) through the same join/leave path;
   * ``crossval``  — measured-vs-modeled knee comparison (live / DES /
     closed-form), the loop ``benchmarks/fig_cluster_scaling.py`` plots.
 """
+from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig, ScaleAction
 from repro.cluster.cluster import ClusterResult, ClusterSpec, ServingCluster
 from repro.cluster.crossval import KneeComparison, knee_comparison
+from repro.cluster.faults import FaultEngine, FaultEvent, FaultPlan
 from repro.cluster.loadgen import ClosedLoopLoadGen, OpenLoopLoadGen
-from repro.cluster.metrics import LatencyStats, SLOReport, TailSLO
+from repro.cluster.metrics import (LatencyStats, RecoveryReport, SLOReport,
+                                   TailSLO, recovery_report)
 from repro.cluster.scheduler import ConsumerGroup
 
 __all__ = [
     "ClusterResult", "ClusterSpec", "ServingCluster",
     "KneeComparison", "knee_comparison",
+    "FaultEngine", "FaultEvent", "FaultPlan",
+    "Autoscaler", "AutoscalerConfig", "ScaleAction",
     "ClosedLoopLoadGen", "OpenLoopLoadGen",
-    "LatencyStats", "SLOReport", "TailSLO",
+    "LatencyStats", "RecoveryReport", "SLOReport", "TailSLO",
+    "recovery_report",
     "ConsumerGroup",
 ]

@@ -82,6 +82,10 @@ class ClusterSpec:
     fetch_max_wait_s: float | None = None   # default: bk.fetch_max_wait_s
     placement: str = "host"              # real mode: where the replica's
     #                                      crop decode runs (host|device)
+    fault_plan: object = None            # FaultPlan; one timeline drives
+    #                                      BOTH engines (live + DES)
+    autoscale: object = None             # AutoscalerConfig; elastic
+    #                                      replica count in both engines
 
     @property
     def eff(self) -> float:
@@ -114,11 +118,23 @@ class ClusterSpec:
 
     def des_sim(self, speedup: float | None = None, *, sim_time: float = 20.0,
                 warmup: float = 4.0, seed: int | None = None) -> ClusterSim:
-        """The equivalent DES run (scale pre-applied, so scale=1)."""
+        """The equivalent DES run (scale pre-applied, so scale=1).
+
+        A spec with a ``fault_plan``, ``autoscale``, or explicit
+        ``n_partitions`` hands them to the DES (duck-typed — ``repro.
+        core`` never imports the cluster package), switching it onto
+        the dynamic-membership path so both engines replay one timeline
+        over one topology. Default specs keep the legacy static path
+        (pinned by the golden fixtures) byte-identical."""
+        kw: dict = {}
+        if (self.fault_plan is not None or self.autoscale is not None
+                or self.n_partitions is not None):
+            kw = dict(fault_plan=self.fault_plan, autoscale=self.autoscale,
+                      n_partitions=self.partitions)
         return ClusterSim(self.scaled_workload(), self.scaled_broker(),
                           speedup=self.speedup if speedup is None else speedup,
                           scale=1.0, sim_time=sim_time, warmup=warmup,
-                          seed=self.seed if seed is None else seed)
+                          seed=self.seed if seed is None else seed, **kw)
 
 
 @dataclass
@@ -140,6 +156,11 @@ class ClusterResult:
     log: EventLog
     slo: SLOReport | None = None
     inflight_growth: float = 0.0       # second-half minus first-half mean
+    requeues: int = 0                  # in-flight work re-enqueued on kills
+    faults: list = field(default_factory=list)        # AppliedFault records
+    scale_actions: list = field(default_factory=list)  # ScaleAction records
+    samples: list = field(default_factory=list)       # (t_complete, latency)
+    inflight_samples: list = field(default_factory=list)  # (t, in-flight)
 
     @property
     def drop_fraction(self) -> float:
@@ -154,7 +175,12 @@ class ClusterResult:
     def to_dict(self) -> dict:
         d = dict(self.__dict__)
         d["latency"] = self.latency.to_dict()
+        d["faults"] = [(f.t, f.action, f.target) for f in self.faults]
+        d["scale_actions"] = [(a.t, a.delta, a.n_before, a.reason)
+                              for a in self.scale_actions]
         d.pop("log")
+        d.pop("samples")
+        d.pop("inflight_samples")
         return d
 
 
@@ -182,11 +208,14 @@ class ServingCluster:
         self._replica_states: dict[str, _ReplicaState] = {}
         self._replica_threads: list[threading.Thread] = []
         self._removed: set[str] = set()
+        self._killed: set[str] = set()
         self._feeder_threads: list[threading.Thread] = []
         self._done_events: dict[int, threading.Event] = {}
         self._identify = None                  # lazy, real mode only
         self._n_spawned = 0
         self._inflight_samples: list[tuple[float, int]] = []
+        self.fault_engine = None
+        self.autoscaler = None
 
     # ---- time -------------------------------------------------------------
 
@@ -246,6 +275,17 @@ class ServingCluster:
         mon = threading.Thread(target=self._monitor, daemon=True)
         self._feeder_threads.append(mon)
         mon.start()
+        if sp.fault_plan is not None:
+            from repro.cluster.faults import FaultEngine
+            self.fault_engine = FaultEngine(sp.fault_plan)
+            ft = threading.Thread(target=self.fault_engine.run_live,
+                                  args=(self,), daemon=True)
+            self._feeder_threads.append(ft)
+            ft.start()
+        if sp.autoscale is not None:
+            at = threading.Thread(target=self._autoscale_loop, daemon=True)
+            self._feeder_threads.append(at)
+            at.start()
 
     def _monitor(self) -> None:
         """Samples the in-flight population for the divergence signal.
@@ -286,6 +326,50 @@ class ServingCluster:
         the survivors and the thread exits at its next ownership check."""
         self._removed.add(name)
         self.group.leave(name)
+
+    def kill_replica(self, name: str) -> None:
+        """Abrupt failure (fault engine): same membership transition as
+        a graceful leave — the group just sees a member vanish — but
+        tracked separately so results can attribute the rebalance to a
+        fault. The victim's held-back records are requeued (with a
+        logged ``requeue`` event) on its way out, never dropped."""
+        self._killed.add(name)
+        self.group.leave(name)
+
+    def _autoscale_loop(self) -> None:
+        """Samples backlog + recent tail every interval and applies the
+        controller's delta through the ordinary join/leave path — the
+        group code never learns that elasticity exists (same zero-
+        awareness contract as the fault engine)."""
+        sp = self.spec
+        ctl = self.autoscaler = sp.autoscale.controller()
+        from repro.cluster.metrics import percentile
+        interval_wall = sp.autoscale.interval_s / sp.time_compression
+        horizon = 4 * sp.autoscale.interval_s
+        while True:
+            time.sleep(min(interval_wall, max(
+                0.0, self.wall_deadline - time.perf_counter())) or 0.001)
+            if time.perf_counter() >= self.wall_deadline:
+                return
+            t = self._now_model()
+            states = list(self._replica_states.values())
+            backlog = self.produced - sum(st.served for st in states)
+            recent = [lat for st in states
+                      for t_sub, lat in st.latencies[-256:]
+                      if t_sub + lat > t - horizon]
+            p99 = percentile(recent, 0.99) if recent else None
+            members = self.group.members
+            delta = ctl.decide(t, backlog, len(members), p99)
+            for _ in range(delta):
+                self.add_replica()
+            if delta < 0:
+                # shrink newest-first: replica names carry their spawn
+                # index, so "newest" is well-defined and deterministic
+                for name in sorted(
+                        members,
+                        key=lambda n: -int(n.rsplit("-", 1)[1]))[:-delta]:
+                    if len(self.group.members) > 1:
+                        self.remove_replica(name)
 
     def run(self) -> ClusterResult:
         self.start()
@@ -400,7 +484,7 @@ class ServingCluster:
         batchers: dict[int, Batcher] = {}
         pending: dict[int, list] = {}
         while time.perf_counter() < self.wall_deadline:
-            if name in self._removed:
+            if name in self._removed or name in self._killed:
                 break
             asg = self.group.assignment(name)
             # revoked partitions: hand any held-back records straight
@@ -408,8 +492,7 @@ class ServingCluster:
             # (not at thread exit — a rebalance survivor keeps running)
             for pi in list(pending):
                 if pi not in asg.partitions and pending[pi]:
-                    for m in pending.pop(pi):
-                        self.topic.partitions[pi].queue.put(m)
+                    self._requeue(pi, pending.pop(pi))
             if not asg.partitions:
                 time.sleep(0.004)
                 continue
@@ -451,8 +534,19 @@ class ServingCluster:
         # hand anything still pending back to the partition queue: the
         # rebalanced owner (or final backlog accounting) picks it up
         for pi, buf in pending.items():
-            for m in buf:
-                self.topic.partitions[pi].queue.put(m)
+            self._requeue(pi, buf)
+
+    def _requeue(self, pi: int, msgs: list) -> None:
+        """Give held-back records back to their partition for the new
+        owner, each with a logged ``requeue`` event — a fault or
+        rebalance relocates work, it never drops it, and the event
+        keeps the five-way tax attribution summing to 1 (the relocated
+        wait lands in the queue bucket)."""
+        now = self._now_model()
+        for m in msgs:
+            self.log.log(m.key, "requeue", now, now,
+                         payload_bytes=int(m.size))
+            self.topic.partitions[pi].queue.put(m)
 
     def _serve(self, st: _ReplicaState, part, batch: list[Message]) -> None:
         sp = self.spec
@@ -526,6 +620,9 @@ class ServingCluster:
             "consumers": sum(st.busy_model for st in states)
             / (span_model * max(len(states), 1)),
         }
+        completions = sorted((t_sub + lat, lat)
+                             for st in states
+                             for t_sub, lat in st.latencies)
         result = ClusterResult(
             spec_speedup=sp.speedup, n_replicas=len(states),
             produced=self.produced, completed=completed,
@@ -533,7 +630,15 @@ class ServingCluster:
             latency=stats, throughput=len(samples) / steady_span,
             utilization=util, predicted_rho=sp.predicted_rho(),
             producer_lag_mean=lag_mean, rebalances=self.group.rebalances,
-            fetch_stats=fetch, log=self.log, inflight_growth=growth)
+            fetch_stats=fetch, log=self.log, inflight_growth=growth,
+            requeues=sum(1 for e in self.log.events
+                         if e.stage == "requeue"),
+            faults=(list(self.fault_engine.applied)
+                    if self.fault_engine else []),
+            scale_actions=(list(self.autoscaler.actions)
+                           if self.autoscaler else []),
+            samples=completions,
+            inflight_samples=list(self._inflight_samples))
         if self.slo is not None:
             result.slo = self.slo.check(stats, result.drop_fraction)
         return result

@@ -126,3 +126,53 @@ def knee_comparison(spec, include_live: bool = True,
         closed_form=spec.closed_form_knee(),
         des=des_knee(spec, iters=des_iters),
         live=live_knee(spec, iters=live_iters) if include_live else None)
+
+
+@dataclass
+class FaultKnees:
+    """Knee movement under a persistent degradation.
+
+    ``closed_healthy``/``closed_degraded`` price the spec analytically
+    before and after the fault (e.g. one fewer drive per broker);
+    ``des_degraded`` measures the degraded knee by bisection on DES
+    runs that carry the fault plan for their WHOLE horizon — the
+    cross-validation the fig_fault_recovery benchmark gates on.
+    """
+    closed_healthy: float
+    closed_degraded: float
+    des_degraded: float
+
+    @property
+    def agree(self) -> bool:
+        return (abs(self.des_degraded - self.closed_degraded)
+                / self.closed_degraded) <= DES_TOL
+
+    def row(self) -> str:
+        return (f"closed={self.closed_healthy:.1f}"
+                f"->degraded={self.closed_degraded:.1f};"
+                f"des={self.des_degraded:.1f};agree={self.agree}")
+
+
+def fault_knees(spec, fault_plan, degraded_spec,
+                iters: int = 5, sim_time: float = 20.0,
+                warmup: float = 4.0) -> FaultKnees:
+    """Where the stability knee sits while a fault persists.
+
+    ``degraded_spec`` is the healthy spec with the fault's effect
+    applied statically (drives removed, replicas reduced) — its closed
+    form is the analytic target. The DES probe runs the healthy spec
+    WITH ``fault_plan`` (fault applied early, never repaired), so the
+    measured knee comes from the dynamic fault machinery, not from a
+    statically reconfigured sim — that non-circularity is the point.
+    """
+    closed_h = spec.closed_form_knee()
+    closed_d = degraded_spec.closed_form_knee()
+    probe = replace(spec, fault_plan=fault_plan)
+
+    def diverged(s: float) -> bool:
+        return probe.des_sim(speedup=s, sim_time=sim_time,
+                             warmup=warmup).run().diverged
+
+    des_d = find_knee(diverged, 0.4 * closed_d, 2.0 * closed_d, iters)
+    return FaultKnees(closed_healthy=closed_h, closed_degraded=closed_d,
+                      des_degraded=des_d)

@@ -67,6 +67,35 @@ class OpenLoopLoadGen:
         return self.n_producers / self.period_s
 
 
+def diurnal_profile(horizon_s: float, base_rate: float, peak_rate: float,
+                    period_s: float, seed: int = 0,
+                    dt: float | None = None) -> list[tuple[float, float]]:
+    """Seeded diurnal offered-load trace: ``(t, rate)`` samples.
+
+    One sinusoidal day–night cycle per ``period_s`` between
+    ``base_rate`` (trough) and ``peak_rate`` (peak), plus ±5% seeded
+    jitter per sample — the golden trace the autoscaler's
+    scale-down-never-violates-SLO test replays through the fluid-queue
+    harness. Deterministic in its arguments (one ``random.Random``,
+    no module RNG), like every generator in this module.
+    """
+    import math
+    if peak_rate < base_rate:
+        raise ValueError("peak_rate must be >= base_rate")
+    rng = _rng(seed, 0)
+    dt = period_s / 48 if dt is None else dt
+    mid = 0.5 * (base_rate + peak_rate)
+    amp = 0.5 * (peak_rate - base_rate)
+    out: list[tuple[float, float]] = []
+    t = 0.0
+    while t < horizon_s:
+        rate = mid - amp * math.cos(2 * math.pi * t / period_s)
+        rate *= 1.0 + 0.05 * (2 * rng.random() - 1)
+        out.append((t, max(0.0, rate)))
+        t += dt
+    return out
+
+
 @dataclass
 class ClosedLoopLoadGen:
     """K clients, each: submit -> await completion -> think -> repeat.

@@ -20,6 +20,8 @@ from __future__ import annotations
 import threading
 from dataclasses import dataclass
 
+from repro.core.broker import range_assignment
+
 
 @dataclass
 class Assignment:
@@ -66,17 +68,7 @@ class ConsumerGroup:
         """Range assignment over the sorted member list (lock held)."""
         self.generation += 1
         self.rebalances += 1
-        self._table = {}
-        members = sorted(self._members)
-        if not members:
-            return
-        n, m = self.n_partitions, len(members)
-        base, extra = divmod(n, m)
-        start = 0
-        for i, member in enumerate(members):
-            width = base + (1 if i < extra else 0)
-            self._table[member] = tuple(range(start, start + width))
-            start += width
+        self._table = range_assignment(self._members, self.n_partitions)
 
     def _assignment(self, member: str) -> Assignment:
         return Assignment(self.generation, self._table.get(member, ()))
@@ -85,6 +77,20 @@ class ConsumerGroup:
         """The member's current partitions, stamped with the generation."""
         with self._lock:
             return self._assignment(member)
+
+    def check_fence(self, member: str, partition: int,
+                    generation: int) -> bool:
+        """Generation fence for a write/commit attempt.
+
+        True only when ``generation`` is the CURRENT generation and
+        ``member`` owns ``partition`` in it — a write stamped with any
+        older generation is rejected, so a zombie consumer that was
+        rebalanced away (or killed by the fault engine) can never
+        commit against a partition it no longer owns.
+        """
+        with self._lock:
+            return (generation == self.generation
+                    and partition in self._table.get(member, ()))
 
     def owner_of(self, partition: int) -> str | None:
         with self._lock:

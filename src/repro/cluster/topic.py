@@ -68,14 +68,35 @@ class BrokerWriter(threading.Thread):
         self.free_at = 0.0
         self.busy = 0.0                   # wall seconds the channel served
         self.bytes = 0.0
+        # fault-engine hooks: a stalled channel stops draining its inbox
+        # (records pile up and replay at pacing once cleared); set_drives
+        # swaps the pacing config mid-run. The serve loop below reads
+        # self.cfg fresh per chunk, so neither needs its cooperation.
+        self.stalled = threading.Event()
+        self._base_drives = cfg.drives_per_broker
 
     CHUNK = 128
+
+    def set_drives(self, n: int) -> None:
+        """Repace the channel at ``n`` drives (fault engine only)."""
+        from dataclasses import replace
+        n = max(1, min(n, self._base_drives))
+        self.cfg = replace(self.cfg, drives_per_broker=n)
+
+    def drop_drive(self) -> None:
+        self.set_drives(self.cfg.drives_per_broker - 1)
+
+    def restore_drive(self) -> None:
+        self.set_drives(self.cfg.drives_per_broker + 1)
 
     def run(self) -> None:
         while True:
             now = time.perf_counter()
             if now >= self.deadline:
                 return
+            if self.stalled.is_set():
+                time.sleep(0.002)
+                continue
             try:
                 chunk = [self.inbox.get(
                     timeout=min(0.02, self.deadline - now))]

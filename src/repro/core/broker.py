@@ -73,6 +73,41 @@ class BrokerConfig:
                        net_bw=self.net_bw * eff)
 
 
+def range_assignment(members, n_partitions: int) -> dict:
+    """Kafka's range assignment: partitions split contiguously over the
+    sorted member list (first ``extra`` members get one more).
+
+    Pure and deterministic in (members, n_partitions) — no RNG — so the
+    live ``ConsumerGroup`` and the DES's fault-mode membership map share
+    one implementation and can never disagree about who owns what.
+    Members beyond ``n_partitions`` own nothing (idle standbys).
+    """
+    table: dict = {}
+    ms = sorted(members)
+    if not ms:
+        return table
+    base, extra = divmod(n_partitions, len(ms))
+    start = 0
+    for i, m in enumerate(ms):
+        width = base + (1 if i < extra else 0)
+        table[m] = tuple(range(start, start + width))
+        start += width
+    return table
+
+
+def pick_victim(members, rank):
+    """Rank-th member of the sorted alive list (None when empty).
+
+    The ONE victim-selection rule for fault injection, shared by the
+    live ``FaultEngine`` and the DES so a fault plan names the same
+    casualty in both runtimes.
+    """
+    ms = sorted(members)
+    if not ms:
+        return None
+    return ms[(rank or 0) % len(ms)]
+
+
 @dataclass
 class Partition:
     topic: str

@@ -32,6 +32,7 @@ DETECT_POOL = 8     # heatmap downsampling factor (full-res / pool)
 _STAGE_CATEGORY = {
     "ingest": "pre", "detect": "ai", "identify": "ai",
     "wait": "queue", "wait_frames": "queue", "reject": "queue",
+    "requeue": "queue",   # fault rebalance: in-flight work re-enqueued
     "transfer": "transfer",
 }
 

@@ -71,3 +71,89 @@ class TailSLO:
 class SLOReport:
     ok: bool
     violations: list = field(default_factory=list)
+
+
+# ---- fault-recovery accounting ---------------------------------------------
+#
+# Everything below windows a stream of (completion_time, latency)
+# samples around a fault so both execution engines (DES simulated time,
+# live compressed wall time) report recovery in the same vocabulary:
+# how high the rebalance spike pushed the tail, and how long after the
+# repair the tail took to return to its pre-fault level.
+
+
+def windowed_percentile(samples, q: float,
+                        window_s: float) -> list[tuple[float, float, int]]:
+    """Tumbling-window tail over ``(t, latency)`` samples.
+
+    Returns ``(window_end_t, percentile, n)`` per non-empty window,
+    aligned to ``t=0`` so same-seed runs window identically. Windows
+    with no completions are simply absent — during a full outage
+    nothing completes, and an empty window must not read as "tail
+    recovered to zero".
+    """
+    if window_s <= 0:
+        raise ValueError("window_s must be positive")
+    buckets: dict[int, list[float]] = {}
+    for t, lat in samples:
+        buckets.setdefault(int(t // window_s), []).append(lat)
+    return [((i + 1) * window_s, percentile(xs, q), len(xs))
+            for i, xs in sorted(buckets.items())]
+
+
+@dataclass
+class RecoveryReport:
+    """How a fault window moved the tail, and how fast it came back.
+
+    ``recovery_s`` is measured from the REPAIR (``t_restore``), not the
+    fault: it answers "once capacity returned, how long until the tail
+    forgot the outage" — the backlog-drain time the paper's queueing
+    model prices. ``inf`` means the tail never re-entered
+    ``factor * baseline_p99`` before the run ended.
+    """
+    baseline_p99: float           # pre-fault tail
+    spike_p99: float              # worst window at/after the fault
+    recovery_s: float             # repair -> tail back under factor*baseline
+    drain_s: float                # repair -> backlog back under pre-fault mean
+    windows: list = field(default_factory=list)
+
+    def to_dict(self) -> dict:
+        return {k: (v if k != "windows" else list(v))
+                for k, v in self.__dict__.items()}
+
+
+def recovery_report(samples, t_fault: float, t_restore: float,
+                    window_s: float = 0.5, q: float = 0.99,
+                    factor: float = 1.5,
+                    depth_samples=None) -> RecoveryReport:
+    """Window ``(t, latency)`` completions around a fault.
+
+    ``samples``: completion stream; ``t_fault``/``t_restore``: model
+    times of the outage and the repair; ``factor``: recovered means the
+    windowed tail is back within ``factor * baseline``. Optional
+    ``depth_samples`` ``(t, depth)`` adds backlog drain time.
+    """
+    if t_restore < t_fault:
+        raise ValueError("t_restore must not precede t_fault")
+    windows = windowed_percentile(samples, q, window_s)
+    pre = [p for t, p, _ in windows if t <= t_fault]
+    baseline = percentile(pre, q) if pre else 0.0
+    post = [(t, p) for t, p, _ in windows if t > t_fault]
+    spike = max((p for _, p in post), default=baseline)
+    recovery = float("inf")
+    for t, p in post:
+        if t >= t_restore and p <= factor * max(baseline, 1e-12):
+            recovery = max(0.0, t - t_restore)
+            break
+    drain = 0.0
+    if depth_samples:
+        pre_d = [d for t, d in depth_samples if t <= t_fault]
+        floor = (sum(pre_d) / len(pre_d)) if pre_d else 0.0
+        drain = float("inf")
+        for t, d in depth_samples:
+            if t >= t_restore and d <= max(floor, 1.0):
+                drain = max(0.0, t - t_restore)
+                break
+    return RecoveryReport(baseline_p99=baseline, spike_p99=spike,
+                          recovery_s=recovery, drain_s=drain,
+                          windows=windows)

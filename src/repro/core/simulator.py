@@ -19,7 +19,8 @@ import heapq
 import random
 from dataclasses import dataclass, field
 
-from repro.core.broker import BrokerConfig, Message, Topic
+from repro.core.broker import (BrokerConfig, Message, Topic,
+                               pick_victim, range_assignment)
 from repro.core.events import EventLog
 
 
@@ -126,6 +127,11 @@ class SimResult:
     # the closed form must use ``diverged`` or the agreement would be
     # circular.
     diverged: bool = False
+    # fault/elasticity accounting (dynamic-membership runs only)
+    requeues: int = 0               # in-flight work re-enqueued by kills
+    fault_events: int = 0           # fault-plan transitions applied
+    scale_events: int = 0           # autoscaler actions applied
+    final_consumers: int = 0        # alive consumers at sim end
 
     def to_dict(self):
         return dict(self.__dict__)
@@ -137,10 +143,22 @@ class ClusterSim:
     def __init__(self, wl: FaceRecWorkload, bk: BrokerConfig,
                  speedup: float = 1.0, scale: float = 0.05,
                  sim_time: float = 40.0, warmup: float = 8.0,
-                 seed: int = 0):
+                 seed: int = 0, fault_plan=None, autoscale=None,
+                 n_partitions: int | None = None, sample_dt: float = 0.25):
         """``scale`` shrinks producer/consumer counts and broker bandwidth
         together, preserving utilizations and latencies while cutting the
-        event count (840 producers -> 42 at scale=0.05)."""
+        event count (840 producers -> 42 at scale=0.05).
+
+        ``fault_plan`` (any object with ``.events`` of ``.t/.action/
+        .target`` — duck-typed so core never imports the cluster
+        package) and ``autoscale`` (an ``AutoscalerConfig``-shaped
+        object with ``.interval_s`` and ``.controller()``) switch the
+        run onto the dynamic-membership path: consumers become group
+        members over ``n_partitions`` partitions (default: one per
+        consumer) with range assignment, kills requeue in-flight work,
+        and the controller adds/removes members live. Without either,
+        the legacy static path runs byte-identically to before (the
+        golden DES fixtures pin this)."""
         self.wl = wl
         self.bk = bk
         self.S = speedup
@@ -153,16 +171,34 @@ class ClusterSim:
         self.write_ch = [_Channel(bk.storage_write_capacity * self.eff_scale)
                          for _ in range(bk.n_brokers)]
         self.prod_ch = [_Channel() for _ in range(self.n_prod)]
-        self.topic = Topic("faces", self.n_cons, bk)
+        self.fault_plan = fault_plan
+        self.autoscale = autoscale
+        self.dynamic = (fault_plan is not None or autoscale is not None
+                        or n_partitions is not None)
+        self.n_partitions = n_partitions or self.n_cons
+        self.sample_dt = sample_dt
+        self.topic = Topic("faces", self.n_partitions, bk)
         self.log = EventLog()
         self.msgs: list[Message] = []
         self.ingest_delays: list[float] = []
         self._id = 0
         self._published = 0     # messages handed to a write channel
+        # dynamic-path state (inert on the legacy path)
+        self._stalled: set[int] = set()              # broker ids
+        self._stall_buf: dict[int, list] = {}        # broker -> [(part, msg)]
+        self.completions: list = []                  # (t_done, latency)
+        self.depth_samples: list = []                # (t, backlog)
+        self.requeues = 0
+        self.fault_applied: list = []                # (t, action, victim)
+        self.scale_actions: list = []
+        self.generation = 0
+        self._final_alive = self.n_cons
 
     # ---- run ---------------------------------------------------------------
 
     def run(self) -> SimResult:
+        if self.dynamic:
+            return self._run_dynamic()
         wl, S = self.wl, self.S
         heap: list = []
         seq = 0
@@ -221,6 +257,210 @@ class ClusterSim:
                 consumer_free[ci] = t_busy
         return self._result()
 
+    # ---- dynamic membership (faults + elasticity) --------------------------
+
+    def _run_dynamic(self) -> SimResult:
+        """Event loop with live membership over the partition set.
+
+        Consumers become group MEMBERS: ownership is the same
+        ``range_assignment`` the live ``ConsumerGroup`` uses, recomputed
+        whole on every membership change — the AsyncFlow O(1)-per-
+        transition design, so the serve path below carries zero outage
+        awareness (it just reads the current owner map). Service is
+        event-driven (``done`` events carrying the member's epoch)
+        instead of the legacy inline fast-forward, so a kill can fence
+        not-yet-finished work with an epoch bump and requeue it for the
+        new owner instead of dropping it.
+        """
+        from repro.core.metrics import percentile
+        wl, S = self.wl, self.S
+        heap: list = []
+        seq = 0
+
+        def push(t, kind, payload):
+            nonlocal seq
+            heapq.heappush(heap, (t, seq, kind, payload))
+            seq += 1
+
+        period = (wl.frame_period if wl.batch_per_tick
+                  else wl.frame_period / (S if wl.accelerate_ingest else 1))
+        for p in range(self.n_prod):
+            push(self.rng.random() * period, "tick",
+                 {"producer": p, "scheduled": None})
+
+        alive = set(range(self.n_cons))
+        next_cid = self.n_cons
+        consumer_free = {c: 0.0 for c in alive}
+        epoch = {c: 0 for c in alive}
+        inflight: dict[int, list] = {c: [] for c in alive}  # [(pi, msg)] FIFO
+        owner: dict[int, int] = {}                          # partition -> member
+        drives = {b: self.bk.drives_per_broker
+                  for b in range(self.bk.n_brokers)}
+
+        def rebalance(t):
+            self.generation += 1
+            owner.clear()
+            for m, parts in range_assignment(alive, self.n_partitions).items():
+                for pi in parts:
+                    owner[pi] = m
+            for pi in range(self.n_partitions):
+                push(t, "poll", {"pi": pi})
+
+        def requeue_member(t, cid):
+            # fence cid's scheduled completions, hand its in-flight work
+            # back to the partitions — never dropped, so the five-way
+            # attribution keeps summing to 1 through a fault
+            epoch[cid] += 1
+            for pi, m in reversed(inflight[cid]):
+                self.topic.partitions[pi].backlog.insert(0, (t, m))
+                self.log.log(m.key, "requeue", t, t, int(m.size))
+                self.requeues += 1
+            inflight[cid] = []
+
+        def kill(t, rank):
+            victim = pick_victim(alive, rank)
+            if victim is not None:
+                alive.discard(victim)
+                requeue_member(t, victim)
+                rebalance(t)
+            return victim
+
+        def revive(t):
+            nonlocal next_cid
+            cid = next_cid
+            next_cid += 1
+            alive.add(cid)
+            consumer_free[cid] = t
+            epoch[cid] = 0
+            inflight[cid] = []
+            rebalance(t)
+            return cid
+
+        def apply_fault(t, ev):
+            act, tgt = ev.action, ev.target
+            if act == "kill":
+                self.fault_applied.append((t, act, kill(t, tgt)))
+                return
+            if act == "revive":
+                self.fault_applied.append((t, act, revive(t)))
+                return
+            brokers = (range(self.bk.n_brokers) if tgt is None
+                       else [tgt % self.bk.n_brokers])
+            if act == "stall":
+                self._stalled.update(brokers)
+            elif act == "restore":
+                for b in brokers:
+                    self._stalled.discard(b)
+                    # replay deferred writes at pacing from the repair
+                    for part, msg in self._stall_buf.pop(b, []):
+                        t_avail = self.write_ch[b].submit_bytes(
+                            t, msg.size + self.bk.write_overhead_bytes)
+                        push(t_avail, "deliver", {"part": part, "msg": msg})
+            elif act in ("drive_drop", "drive_restore"):
+                from dataclasses import replace
+                delta = -1 if act == "drive_drop" else 1
+                for b in brokers:
+                    drives[b] = max(1, min(drives[b] + delta,
+                                           self.bk.drives_per_broker))
+                    cap = replace(self.bk, drives_per_broker=drives[b]
+                                  ).storage_write_capacity
+                    self.write_ch[b].rate = cap * self.eff_scale
+            self.fault_applied.append((t, act, tgt))
+
+        rebalance(0.0)
+        for ev in (self.fault_plan.events if self.fault_plan else ()):
+            push(ev.t, "fault", {"ev": ev})
+        ctl = self.autoscale.controller() if self.autoscale else None
+        if ctl is not None:
+            push(self.autoscale.interval_s, "ctl", {})
+        push(self.sample_dt, "sample", {})
+        p99_idx = 0     # completions pointer for the recent-window tail
+
+        def backlog_now():
+            # undelivered + in-service + stall-deferred, matching the
+            # live cluster's produced-minus-done signal the controller
+            # is tuned on (LiveTopic.backlog counts writer inboxes too)
+            return (sum(len(p.backlog) for p in self.topic.partitions)
+                    + sum(len(q) for q in inflight.values())
+                    + sum(len(b) for b in self._stall_buf.values()))
+
+        while heap:
+            t, _, kind, pl = heapq.heappop(heap)
+            if t > self.sim_time:
+                break
+            if kind == "tick":
+                self._do_tick(t, pl, push, period)
+            elif kind == "deliver":
+                part, msg = pl["part"], pl["msg"]
+                msg.t_written = t
+                part.append(t, msg)
+                push(t, "poll", {"pi": part.index})
+            elif kind == "poll":
+                pi = pl["pi"]
+                part = self.topic.partitions[pi]
+                if not part.backlog:
+                    continue
+                ci = owner.get(pi)
+                if ci is None:          # group empty; retry until revive
+                    push(t + 10 * period, "poll", {"pi": pi})
+                    continue
+                t_free = max(t, consumer_free[ci])
+                ready = sum(m.size for _, m in part.backlog)
+                oldest = part.backlog[0][0]
+                if (ready < self.bk.fetch_min_bytes
+                        and t_free - oldest
+                        < self.bk.fetch_max_wait_s - 1e-9):
+                    push(max(oldest + self.bk.fetch_max_wait_s, t_free)
+                         + 1e-9, "poll", {"pi": pi})
+                    continue
+                batch, part.backlog = list(part.backlog), []
+                t_busy = t_free
+                for _, m in batch:
+                    m.t_consumed = t_busy
+                    dur = wl.t_identify / S
+                    inflight[ci].append((pi, m))
+                    push(t_busy + dur, "done",
+                         {"ci": ci, "epoch": epoch[ci], "t_start": t_busy})
+                    t_busy += dur
+                consumer_free[ci] = t_busy
+            elif kind == "done":
+                ci = pl["ci"]
+                if pl["epoch"] != epoch.get(ci, -1) or not inflight[ci]:
+                    continue            # fenced: member killed/shrunk away
+                pi, m = inflight[ci].pop(0)
+                self.log.log(m.key, "wait", m.t_produced, m.t_consumed,
+                             int(m.size))
+                self.log.log(m.key, "identify", pl["t_start"], t,
+                             int(m.size))
+                self.msgs.append(m)
+                self.completions.append((t, t - m.t_produced))
+            elif kind == "fault":
+                apply_fault(t, pl["ev"])
+            elif kind == "sample":
+                self.depth_samples.append((t, backlog_now()))
+                push(t + self.sample_dt, "sample", {})
+            elif kind == "ctl":
+                horizon = 4 * self.autoscale.interval_s
+                while (p99_idx < len(self.completions)
+                       and self.completions[p99_idx][0] < t - horizon):
+                    p99_idx += 1
+                recent = [lat for _, lat in self.completions[p99_idx:]]
+                p99 = percentile(recent, 0.99) if recent else None
+                delta = ctl.decide(t, backlog_now(), len(alive), p99)
+                for _ in range(delta):
+                    revive(t)
+                for _ in range(-delta):
+                    if len(alive) > 1:
+                        # shrink the newest member, kill-style: fence +
+                        # requeue so scale-down loses no in-flight work
+                        kill(t, len(alive) - 1)
+                push(t + self.autoscale.interval_s, "ctl", {})
+
+        if ctl is not None:
+            self.scale_actions = list(ctl.actions)
+        self._final_alive = len(alive)
+        return self._result()
+
     def _do_tick(self, t, pl, push, period):
         wl, S = self.wl, self.S
         p = pl["producer"]
@@ -256,6 +496,13 @@ class ClusterSim:
                 msg = Message(key=rid, size=wl.face_bytes, t_produced=t_busy)
                 msg.t_published = t_sent + self.bk.linger_s
                 part = self.topic.pick_partition()
+                if part.leader in self._stalled:
+                    # fault engine: the leader's write channel is down.
+                    # Defer the submission; restore replays it (legacy
+                    # path never populates _stalled, so never comes here)
+                    self._stall_buf.setdefault(part.leader, []).append(
+                        (part, msg))
+                    continue
                 wch = self.write_ch[part.leader]
                 t_avail = wch.submit_bytes(
                     msg.t_published, msg.size + self.bk.write_overhead_bytes)
@@ -322,7 +569,10 @@ class ClusterSim:
             ingest_delay_mean=d_mean, messages=len(msgs),
             p50_latency=(float("inf") if unstable else p50),
             p95_latency=(float("inf") if unstable else p95),
-            backlog=backlog, unwritten=unwritten, diverged=diverged)
+            backlog=backlog, unwritten=unwritten, diverged=diverged,
+            requeues=self.requeues, fault_events=len(self.fault_applied),
+            scale_events=len(self.scale_actions),
+            final_consumers=self._final_alive)
 
     def _drive_eff(self) -> float:
         d = self.bk.drives_per_broker

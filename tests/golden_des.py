@@ -27,6 +27,7 @@ _SIM_KW = dict(scale=0.04, sim_time=20, warmup=5, seed=0)
 def compute_goldens() -> dict:
     out: dict = {"sim_kw": dict(_SIM_KW), "fig10_11": {}, "fig15": {}}
     wl, bk = FaceRecWorkload(), BrokerConfig()
+    out["fault_kill_revive"] = _fault_golden(wl, bk)
     for s in (1, 2, 4, 6, 8):
         r = ClusterSim(wl, bk, speedup=s, **_SIM_KW).run()
         entry = {
@@ -57,3 +58,37 @@ def compute_goldens() -> dict:
         out["fig15"][f"face_x{frac}"] = max_stable_speedup(
             FaceRecWorkload(face_bytes=37_300 * frac), bk)
     return out
+
+
+def _fault_golden(wl: FaceRecWorkload, bk: BrokerConfig) -> dict:
+    """The pinned kill-revive scenario (dynamic-membership DES path).
+
+    At S=6 with the Fig-10 sizing, 30 of the 67 consumers die at t=6
+    (consumer rho 0.69 -> 1.25) and 30 fresh members join at t=10: the
+    fixture pins the requeue count, the recovery-window tail, and the
+    backlog drain at the same 1e-7 tolerance as the legacy quantities
+    — same-seed fault runs must stay bit-identical.
+    """
+    from repro.core.metrics import recovery_report
+    from repro.cluster.faults import FaultPlan
+
+    plan = FaultPlan.kill_revive(6.0, 10.0, n=30)
+    sim = ClusterSim(wl, bk, speedup=6, fault_plan=plan, **_SIM_KW)
+    r = sim.run()
+    rep = recovery_report(sim.completions, 6.0, 10.0, window_s=1.0,
+                          depth_samples=sim.depth_samples)
+    return {
+        "t_kill": 6.0, "t_revive": 10.0, "n_killed": 30, "speedup": 6,
+        "requeues": r.requeues,
+        "fault_events": r.fault_events,
+        "final_consumers": r.final_consumers,
+        "messages": r.messages,
+        "throughput": r.throughput,
+        "backlog": r.backlog,
+        "unwritten": r.unwritten,
+        "diverged": r.diverged,
+        "baseline_p99": rep.baseline_p99,
+        "spike_p99": rep.spike_p99,
+        "recovery_s": rep.recovery_s,
+        "drain_s": rep.drain_s,
+    }

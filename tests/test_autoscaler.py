@@ -1,0 +1,181 @@
+"""SLO-driven autoscaler: control-law units, DES runs, diurnal trace.
+
+Three harnesses drive the ONE control law (``Autoscaler.decide`` is
+pure state + arithmetic):
+  * direct unit tests — hysteresis dead band, cooldown lockout, bounds;
+  * the DES — an underprovisioned cluster that would diverge statically
+    is rescued by scale-up before the knee, converging on at least the
+    closed-form minimum replica count;
+  * a fluid-queue replay of the golden diurnal trace — scale-down fires
+    on the night-side drain yet the p99 SLO is never violated (the
+    shrink guards are the thing under test).
+"""
+import math
+
+import pytest
+
+from repro.cluster import AutoscalerConfig, ClusterSpec
+from repro.cluster.autoscaler import Autoscaler
+from repro.cluster.loadgen import diurnal_profile
+from repro.core.queueing import utilizations
+
+
+# ---- config validation ------------------------------------------------------
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        AutoscalerConfig(min_replicas=0)
+    with pytest.raises(ValueError):
+        AutoscalerConfig(min_replicas=8, max_replicas=4)
+    with pytest.raises(ValueError):
+        AutoscalerConfig(up_backlog=4.0, down_backlog=4.0)
+    with pytest.raises(ValueError):
+        AutoscalerConfig(step=0)
+    assert isinstance(AutoscalerConfig().controller(), Autoscaler)
+
+
+# ---- control-law units ------------------------------------------------------
+
+def test_dead_band_holds_on_constant_load():
+    """Per-replica backlog inside (down, up) never triggers an action,
+    no matter how long it persists — hysteresis cannot oscillate."""
+    ctl = AutoscalerConfig(up_backlog=8, down_backlog=2,
+                           cooldown_s=1.0).controller()
+    for k in range(200):
+        assert ctl.decide(k * 0.25, backlog=5.0 * 4, n_replicas=4) == 0
+    assert ctl.actions == []
+
+
+def test_cooldown_blocks_consecutive_actions():
+    cfg = AutoscalerConfig(cooldown_s=2.0, interval_s=0.25)
+    ctl = cfg.controller()
+    assert ctl.decide(0.0, backlog=100, n_replicas=2) == 1
+    # high pressure throughout the cooldown: still held
+    for k in range(1, 8):
+        assert ctl.decide(k * 0.25, backlog=100, n_replicas=3) == 0
+    assert ctl.decide(2.0, backlog=100, n_replicas=3) == 1
+    ts = [a.t for a in ctl.actions]
+    assert all(b - a >= cfg.cooldown_s for a, b in zip(ts, ts[1:]))
+
+
+def test_bounds_respected():
+    cfg = AutoscalerConfig(min_replicas=2, max_replicas=4, cooldown_s=0.0)
+    ctl = cfg.controller()
+    assert ctl.decide(0.0, backlog=1000, n_replicas=4) == 0     # at max
+    assert ctl.decide(1.0, backlog=0, n_replicas=2) == 0        # at min
+    assert ctl.decide(2.0, backlog=0, n_replicas=3) == -1
+
+
+def test_scale_down_guards():
+    """Shrink is refused when the post-removal depth would cross the
+    growth threshold or the tail lacks SLO headroom — scale-down can
+    never be the cause of the next breach."""
+    cfg = AutoscalerConfig(up_backlog=8, down_backlog=2, cooldown_s=0.0,
+                           slo_p99_s=0.5, slo_margin=0.8)
+    ctl = cfg.controller()
+    # depth guard: 2 replicas at backlog 3 -> 1 replica would hold 3 < 8: ok
+    # but 16 replicas at backlog 130 -> per=8.1 is above the band anyway;
+    # craft the marginal case: per=1.9 now, 9.5 after removing 4 of 5
+    cfg2 = AutoscalerConfig(up_backlog=8, down_backlog=2, cooldown_s=0.0,
+                            step=4, slo_p99_s=None)
+    ctl2 = cfg2.controller()
+    assert ctl2.decide(0.0, backlog=9.5, n_replicas=5) == 0
+    # SLO guard: depth says shrink, tail says no
+    assert ctl.decide(0.0, backlog=1.0, n_replicas=4, p99=0.45) == 0
+    assert ctl.decide(1.0, backlog=1.0, n_replicas=4, p99=None) == 0
+    assert ctl.decide(2.0, backlog=1.0, n_replicas=4, p99=0.2) == -1
+
+
+# ---- DES: scale-up rescues an underprovisioned cluster ----------------------
+
+@pytest.mark.slow
+def test_des_scale_up_beats_the_knee():
+    """Start with 2 consumers where the closed form needs 6: the static
+    run diverges, the autoscaled run does not, and the controller
+    converges on at least the closed-form minimum replica count."""
+    spec = ClusterSpec(n_replicas=2, n_producers=4, n_partitions=12,
+                       speedup=4)
+    # closed-form minimum: smallest R with consumer rho < 1
+    wl = spec.scaled_workload()
+    need = next(r for r in range(1, 32)
+                if utilizations(wl, spec.scaled_broker(), spec.speedup,
+                                n_consumers=r)["consumers"].rho < 1.0)
+    assert need >= 3                      # the scenario is real
+
+    static = spec.des_sim(sim_time=20, warmup=4).run()
+    assert static.diverged                # underprovisioned, no rescue
+
+    auto = ClusterSpec(
+        n_replicas=2, n_producers=4, n_partitions=12, speedup=4,
+        autoscale=AutoscalerConfig(min_replicas=2, max_replicas=12,
+                                   interval_s=0.25, cooldown_s=0.75))
+    sim = auto.des_sim(sim_time=20, warmup=4)
+    r = sim.run()
+    assert not r.diverged
+    assert r.scale_events > 0
+    assert r.final_consumers >= need
+    # the rescue happened early — before the backlog ran away
+    assert sim.scale_actions[0].t < 2.0
+
+
+# ---- fluid-queue replay of the golden diurnal trace -------------------------
+
+def _replay_diurnal(cfg: AutoscalerConfig, mu: float, n0: int,
+                    seed: int = 0):
+    """Deterministic fluid M/D/R replay: backlog integrates
+    (rate - R*mu), the p99 proxy is the drain time of the current
+    backlog plus one service — the same signals both real engines feed
+    the controller, minus their noise, so guard violations are
+    attributable to the control law alone."""
+    ctl = cfg.controller()
+    trace = diurnal_profile(horizon_s=120.0, base_rate=20.0,
+                            peak_rate=60.0, period_s=60.0, seed=seed,
+                            dt=cfg.interval_s)
+    R, backlog, hist = n0, 0.0, []
+    for t, rate in trace:
+        backlog = max(0.0, backlog + (rate - R * mu) * cfg.interval_s)
+        p99 = backlog / (R * mu) + 1.0 / mu
+        R = max(cfg.min_replicas, R + ctl.decide(t, backlog, R, p99))
+        hist.append((t, R, backlog, p99))
+    return ctl, hist
+
+
+def test_diurnal_scale_down_never_violates_slo():
+    cfg = AutoscalerConfig(min_replicas=2, max_replicas=16,
+                           interval_s=0.25, cooldown_s=0.5,
+                           up_backlog=4.0, down_backlog=1.0,
+                           slo_p99_s=0.5, slo_margin=0.6)
+    ctl, hist = _replay_diurnal(cfg, mu=5.0, n0=8)
+    downs = [a for a in ctl.actions if a.delta < 0]
+    ups = [a for a in ctl.actions if a.delta > 0]
+    assert downs and ups                  # both sides exercised
+    # THE property: no breach is ever attributable to a shrink. During
+    # each scale-down's lockout window (cooldown + one interval — the
+    # span in which the controller cannot yet correct itself) the SLO
+    # must hold at every step. Breaches on demand up-ramps are the
+    # reactive controller's nature and are allowed; breaches after a
+    # shrink would mean the guards are broken.
+    lockout = cfg.cooldown_s + cfg.interval_s
+    for a in downs:
+        window = [p99 for t, _, _, p99 in hist if a.t < t <= a.t + lockout]
+        assert all(p <= cfg.slo_p99_s for p in window), (a, window)
+    # and the whole trace stays within sane reach of the objective
+    settle = 5.0
+    assert max(p99 for t, _, _, p99 in hist if t > settle) \
+        <= 1.5 * cfg.slo_p99_s
+    # the controller actually tracks the diurnal shape
+    day = max(R for t, R, _, _ in hist if t > settle)
+    night = min(R for t, R, _, _ in hist if t > settle)
+    assert day > night
+
+
+def test_diurnal_replay_is_deterministic():
+    cfg = AutoscalerConfig(min_replicas=2, max_replicas=16,
+                           interval_s=0.25, cooldown_s=0.5,
+                           up_backlog=4.0, down_backlog=1.0,
+                           slo_p99_s=0.5, slo_margin=0.6)
+    a_ctl, a_hist = _replay_diurnal(cfg, mu=5.0, n0=8)
+    b_ctl, b_hist = _replay_diurnal(cfg, mu=5.0, n0=8)
+    assert a_hist == b_hist               # exact float equality
+    assert [(x.t, x.delta) for x in a_ctl.actions] \
+        == [(x.t, x.delta) for x in b_ctl.actions]

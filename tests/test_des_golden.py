@@ -37,6 +37,29 @@ def _assert_close(path: str, want, got):
 def test_fixture_exists_and_covers_the_sweep(golden):
     assert set(golden["fig10_11"]) == {"S1", "S2", "S4", "S6", "S8"}
     assert len(golden["fig15"]) == 11
+    assert "fault_kill_revive" in golden
+
+
+def test_fault_kill_revive_matches_fixture(golden, current):
+    want, got = golden["fault_kill_revive"], current["fault_kill_revive"]
+    assert set(got) == set(want)
+    for field, value in want.items():
+        _assert_close(f"fault_kill_revive.{field}", value, got[field])
+
+
+def test_fault_fixture_pins_the_recovery_story(golden):
+    """The fault fixture must keep encoding the scenario's semantics:
+    work is requeued (never dropped), the outage spikes the windowed
+    tail well above baseline, and the cluster recovers inside the run
+    (finite recovery/drain, no divergence verdict)."""
+    f = golden["fault_kill_revive"]
+    assert f["requeues"] > 0
+    assert f["fault_events"] == 60
+    assert f["final_consumers"] == 67          # all 30 revived
+    assert not f["diverged"]
+    assert f["spike_p99"] > 3 * f["baseline_p99"]
+    assert 0 < f["recovery_s"] < 10.0          # finite, inside the run
+    assert 0 < f["drain_s"] < 10.0
 
 
 def test_fig10_11_des_quantities_match_fixture(golden, current):

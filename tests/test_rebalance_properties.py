@@ -1,0 +1,145 @@
+"""Property tests for consumer-group rebalance invariants under churn.
+
+The fault engine turns membership churn from a rare administrative
+event into the workload itself, so the group's invariants are checked
+under arbitrary seeded join/leave/kill sequences (hypothesis when
+available, its deterministic single-example fallback otherwise):
+
+  * at most one consumer owns a partition at any generation;
+  * every partition is owned whenever >= 1 member is alive;
+  * the generation is strictly monotonic across rebalances;
+  * a write stamped with a stale generation is never accepted
+    (``check_fence``), so a zombie that was rebalanced away cannot
+    commit against a partition it no longer owns.
+"""
+import random
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:      # deterministic single-example shim
+    from hypothesis_fallback import given, settings, st
+
+from repro.core.broker import range_assignment
+from repro.cluster.scheduler import ConsumerGroup
+
+
+def _churn(group: ConsumerGroup, seed: int, steps: int) -> list[str]:
+    """Seeded random membership churn; returns the alive member list.
+
+    ``kill`` and ``leave`` are the SAME group transition (the fault
+    engine's whole point — the group just sees a member vanish), so the
+    sequence only distinguishes join from departure.
+    """
+    rng = random.Random(seed)
+    alive: list[str] = []
+    spawned = 0
+    for _ in range(steps):
+        if not alive or rng.random() < 0.55:
+            name = f"m{spawned}"
+            spawned += 1
+            group.join(name)
+            alive.append(name)
+        else:
+            victim = alive.pop(rng.randrange(len(alive)))
+            group.leave(victim)
+    return alive
+
+
+def _assert_invariants(group: ConsumerGroup, alive: list[str]):
+    table = group.table()
+    assert set(table) == set(alive)
+    owned: list[int] = []
+    for parts in table.values():
+        owned.extend(parts)
+    # disjointness: <= 1 owner per partition
+    assert len(owned) == len(set(owned))
+    # coverage: every partition owned whenever anyone is alive
+    if alive:
+        assert sorted(owned) == list(range(group.n_partitions))
+    else:
+        assert owned == []
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 24), st.integers(1, 40))
+def test_churn_preserves_disjoint_full_coverage(seed, n_partitions, steps):
+    group = ConsumerGroup(n_partitions)
+    alive = _churn(group, seed, steps)
+    _assert_invariants(group, alive)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 12))
+def test_generation_strictly_monotonic(seed, n_partitions):
+    group = ConsumerGroup(n_partitions)
+    rng = random.Random(seed)
+    alive: list[str] = []
+    last = group.generation
+    for i in range(30):
+        if not alive or rng.random() < 0.6:
+            name = f"m{i}"
+            group.join(name)
+            alive.append(name)
+        else:
+            group.leave(alive.pop(rng.randrange(len(alive))))
+        assert group.generation > last
+        last = group.generation
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 16))
+def test_stale_generation_writes_rejected(seed, n_partitions):
+    """A member holding a pre-rebalance assignment can commit nothing:
+    every (member, partition, generation) stamp from before the churn
+    must fail the fence, and post-churn stamps succeed exactly on the
+    partitions the member now owns."""
+    group = ConsumerGroup(n_partitions)
+    group.join("a")
+    group.join("b")
+    stale = {m: group.assignment(m) for m in ("a", "b")}
+    alive = ["a", "b"] + _churn(group, seed, 10)
+    alive = [m for m in alive if m in group.members]
+    for m, asg in stale.items():
+        for pi in asg.partitions:
+            assert not group.check_fence(m, pi, asg.generation)
+    for m in group.members:
+        asg = group.assignment(m)
+        for pi in asg.partitions:
+            assert group.check_fence(m, pi, asg.generation)
+        for pi in range(group.n_partitions):
+            if pi not in asg.partitions:
+                assert not group.check_fence(m, pi, asg.generation)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 48), st.integers(1, 12))
+def test_range_assignment_shape(n_partitions, n_members):
+    """The shared assignment function splits contiguously with sizes
+    differing by at most one — and is what the live group actually
+    serves (single implementation, checked end to end)."""
+    members = [f"m{i}" for i in range(n_members)]
+    table = range_assignment(members, n_partitions)
+    sizes = sorted(len(p) for p in table.values())
+    assert sum(sizes) == n_partitions
+    assert sizes[-1] - sizes[0] <= 1
+    for parts in table.values():
+        assert list(parts) == sorted(parts)
+        if parts:
+            assert parts[-1] - parts[0] == len(parts) - 1   # contiguous
+    group = ConsumerGroup(n_partitions)
+    for m in members:
+        group.join(m)
+    assert group.table() == range_assignment(members, n_partitions)
+
+
+def test_empty_group_owns_nothing_then_recovers():
+    group = ConsumerGroup(6)
+    group.join("a")
+    group.leave("a")
+    assert group.table() == {}
+    assert group.owner_of(3) is None
+    group.join("b")
+    _assert_invariants(group, ["b"])
+    assert group.assignment("b").partitions == tuple(range(6))
