@@ -35,9 +35,14 @@
 #                      hot-path shape battery
 #   make autotune-check - assert the committed cache is in sync with
 #                      what the sweep produces (CI runs this)
+#   make lint        - AST static analysis over src/repro (race-check,
+#                      lock-order-check, tax-stage-check,
+#                      jit-purity-check) against lint_baseline.json;
+#                      exit 0 clean / 1 findings / 2 internal error
+#                      (see docs/static_analysis.md)
 .PHONY: test coverage bench-smoke cluster-smoke faults-smoke \
 	preprocess-smoke bench-diff calibrate docs-lint docs-check \
-	des-golden autotune autotune-check check
+	des-golden autotune autotune-check lint check
 
 PY := PYTHONPATH=src python
 
@@ -91,5 +96,8 @@ autotune:
 autotune-check:
 	$(PY) scripts/autotune.py --check
 
+lint:
+	$(PY) scripts/lint.py
+
 check: test bench-smoke faults-smoke preprocess-smoke docs-check \
-	autotune-check
+	autotune-check lint

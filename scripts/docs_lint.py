@@ -4,7 +4,9 @@ Checks (exit non-zero on any failure):
   * README.md and the docs/ pages exist and are non-trivial;
   * every intra-repo markdown link in README.md / docs/*.md resolves
     to a real file (anchors stripped; external/anchor-only links
-    skipped);
+    skipped); wiki-style ``[[...]]`` links are rejected outright
+    (nothing renders them here), as are relative links that escape
+    the repository root;
   * every ``benchmarks/*.py`` module (minus shared plumbing) is
     mentioned in docs/figures.md;
   * figure-registry sync, both directions: every module registered in
@@ -25,19 +27,30 @@ import sys
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 PLUMBING = {"common.py", "run.py", "__init__.py"}
 REQUIRED_DOCS = ["README.md", "docs/architecture.md", "docs/figures.md",
-                 "docs/ai_tax_accounting.md"]
+                 "docs/ai_tax_accounting.md", "docs/static_analysis.md"]
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_WIKI_LINK = re.compile(r"\[\[[^\]]+\]\]")
 
 
 def _check_links(md: pathlib.Path, errors: list[str]) -> None:
-    for target in _LINK.findall(md.read_text()):
+    text = md.read_text()
+    for i, line in enumerate(text.splitlines(), 1):
+        if _WIKI_LINK.search(line):
+            errors.append(f"{md.relative_to(ROOT)}:{i}: wiki-style "
+                          "[[...]] link — use [text](path), nothing "
+                          "here renders wiki links")
+    for target in _LINK.findall(text):
         if target.startswith(("http://", "https://", "mailto:", "#")):
             continue
         path = target.split("#", 1)[0]
         if not path:
             continue
-        if not (md.parent / path).exists():
+        resolved = (md.parent / path).resolve()
+        if not resolved.exists():
             errors.append(f"{md.relative_to(ROOT)}: broken link -> {target}")
+        elif ROOT not in resolved.parents and resolved != ROOT:
+            errors.append(f"{md.relative_to(ROOT)}: link escapes the "
+                          f"repository -> {target}")
 
 
 def _check_docstrings(errors: list[str]) -> None:

@@ -1,0 +1,109 @@
+"""CLI for the repro static-analysis suite (``make lint``).
+
+Runs the four checkers (race-check, lock-order-check, tax-stage-check,
+jit-purity-check) over ``src/repro``, filtered through inline waivers
+and the committed ``lint_baseline.json``.
+
+Usage: PYTHONPATH=src python scripts/lint.py [options]
+
+  --explain RULE   print what a rule checks and how to waive it
+  --rule RULE      run only the named rule(s) (repeatable)
+  --root PATH      lint a different tree (fixtures; implies bare names)
+  --baseline       regenerate lint_baseline.json from current findings,
+                   preserving reasons already recorded (new entries get
+                   an empty reason, which the linter itself then flags
+                   until a human writes one)
+  --json           machine-readable findings on stdout
+
+Exit codes: 0 clean, 1 findings, 2 internal error (unparseable file,
+checker crash) — the same contract as the other scripts/ gates.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                       / "src"))
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DEFAULT_TREE = ROOT / "src" / "repro"
+BASELINE = ROOT / "lint_baseline.json"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="AST lint: concurrency + tax-accounting invariants")
+    ap.add_argument("--explain", metavar="RULE",
+                    help="print a rule's documentation and exit")
+    ap.add_argument("--rule", action="append", metavar="RULE",
+                    help="run only this rule (repeatable)")
+    ap.add_argument("--root", type=pathlib.Path, default=None,
+                    help="lint this tree instead of src/repro")
+    ap.add_argument("--baseline", action="store_true",
+                    help="regenerate lint_baseline.json")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="JSON findings on stdout")
+    args = ap.parse_args(argv)
+
+    from repro.analysis import runner
+    from repro.analysis import waivers as wv
+    from repro.analysis.checkers import META_RULES, RULES
+
+    if args.explain:
+        texts = {r: doc for r, (_f, doc) in RULES.items()}
+        texts.update(META_RULES)
+        if args.explain not in texts:
+            print(f"unknown rule {args.explain!r}; rules: "
+                  f"{', '.join(sorted(texts))}", file=sys.stderr)
+            return 2
+        print(texts[args.explain].strip())
+        return 0
+
+    bad = [r for r in (args.rule or []) if r not in RULES]
+    if bad:
+        print(f"unknown rule(s) {', '.join(bad)}; rules: "
+              f"{', '.join(sorted(RULES))}", file=sys.stderr)
+        return 2
+
+    custom_root = args.root is not None
+    tree = args.root or DEFAULT_TREE
+    package = None if custom_root else "repro"
+    baseline = None if custom_root else BASELINE
+
+    try:
+        if args.baseline:
+            sources = runner.load_tree(tree, package=package)
+            raw = runner.lint_sources(sources, rules=args.rule)
+            prev = wv.load_baseline(BASELINE)
+            n = wv.write_baseline(BASELINE, raw, prev)
+            print(f"lint: wrote {n} baseline entries to "
+                  f"{BASELINE.name}")
+            return 0
+        findings = runner.run_lint(tree, package=package,
+                                   baseline_path=baseline,
+                                   rules=args.rule)
+    except SyntaxError as e:
+        print(f"lint: internal error: {e}", file=sys.stderr)
+        return 2
+    except Exception as e:                      # checker crash = exit 2
+        import traceback
+        traceback.print_exc()
+        print(f"lint: internal error: {e}", file=sys.stderr)
+        return 2
+
+    if args.as_json:
+        print(json.dumps([f.to_dict() for f in findings], indent=2))
+    else:
+        for f in findings:
+            print(f.format())
+        n = len(findings)
+        print(f"lint: {n} finding{'s' if n != 1 else ''} "
+              f"({'FAIL' if n else 'OK'})")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,31 @@
+"""Static analysis suite: machine-checked concurrency + tax invariants.
+
+The repo's correctness conventions — lock-guarded shared counters in
+the threaded cluster/pipeline, a single canonical stage->bucket table
+behind the five-way tax attribution, side-effect-free jitted programs
+— were enforced only by reviewer vigilance. This package turns them
+into lint rules over the stdlib-``ast`` representation of
+``src/repro`` (no imports of the analyzed code, no runtime cost):
+
+  * ``race-check``       — instance attributes written from
+    thread-reachable methods must be lock-guarded, a threading
+    primitive, or carry a waiver with a reason;
+  * ``lock-order-check`` — the cross-class lock acquisition graph must
+    be acyclic (cycles are potential deadlocks);
+  * ``tax-stage-check``  — every literal stage name passed to
+    ``EventLog.log``-family sinks must resolve through the canonical
+    ``STAGE_CATEGORIES`` table in ``repro.core.events``;
+  * ``jit-purity-check`` — functions reachable from ``jax.jit`` /
+    ``pallas_call`` sites must not reach host side effects (``time``,
+    ``random``, ``threading``, EventLog methods, file I/O).
+
+Entry points: :func:`repro.analysis.runner.run_lint` (library) and
+``scripts/lint.py`` (CLI, wired into ``make lint`` / ``make check``).
+Intentional exceptions live inline (``# lint: waive <rule> -- reason``)
+or in the committed ``lint_baseline.json``; both REQUIRE a non-empty
+reason. See docs/static_analysis.md.
+"""
+from repro.analysis.findings import Finding
+from repro.analysis.runner import run_lint
+
+__all__ = ["Finding", "run_lint"]

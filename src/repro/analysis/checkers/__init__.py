@@ -1,0 +1,34 @@
+"""Checker registry: rule name -> (check function, explanation).
+
+Each checker is ``check(program, graph, sources) -> list[Finding]``.
+The runner executes every registered rule; ``scripts/lint.py
+--explain RULE`` prints the explanation text verbatim.
+"""
+from repro.analysis.checkers import (jitpurity, lockorder, race,
+                                     taxstage)
+
+# rule -> (checker callable, --explain text)
+RULES = {
+    "race-check": (race.check, race.EXPLAIN),
+    "lock-order-check": (lockorder.check, lockorder.EXPLAIN),
+    "tax-stage-check": (taxstage.check, taxstage.EXPLAIN),
+    "jit-purity-check": (jitpurity.check, jitpurity.EXPLAIN),
+}
+
+# meta-rules emitted by the waiver machinery, documented for --explain
+META_RULES = {
+    "waiver-format": (
+        "Every waiver needs a non-empty reason.\n\n"
+        "Inline form:   # lint: waive <rule>[,<rule>] -- <reason>\n"
+        "Baseline form: {\"rule\", \"path\", \"ident\", \"reason\"} in\n"
+        "lint_baseline.json. A waiver without a reason suppresses\n"
+        "nothing and is itself reported — silent suppressions are what\n"
+        "this suite exists to prevent."),
+    "baseline-stale": (
+        "A lint_baseline.json entry no longer matches any finding.\n"
+        "Remove it: the baseline may only shrink as code gets fixed,\n"
+        "never accumulate dead weight that could mask a future\n"
+        "regression at the same identifier."),
+}
+
+__all__ = ["RULES", "META_RULES"]

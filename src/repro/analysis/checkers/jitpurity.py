@@ -1,0 +1,157 @@
+"""jit-purity-check: no host side effects reachable from compiled code.
+
+``jax.jit`` / ``pl.pallas_call`` trace their function once and replay
+the compiled program; host effects inside — clocks, RNG from
+``random``/``np.random``, thread primitives, EventLog appends, file
+I/O — either burn in a single traced value (a timestamp frozen at
+trace time), silently stop happening on cache hits, or tear the
+tracing machinery. The checker seeds from:
+
+  * ``@jax.jit`` / ``@functools.partial(jax.jit, ...)`` decorators;
+  * ``jax.jit(f)`` / ``pl.pallas_call(kernel, ...)`` call sites, with
+    ``functools.partial(f, ...)`` unwrapped one level and lambdas
+    followed;
+
+closes over repo-resolvable call/ref edges, and flags any reached
+function that touches: ``time.*``, ``random.*`` / ``numpy.random.*``,
+``threading.*``, builtin ``open``/``print``, ``Path.read_text`` /
+``write_text``, or an EventLog method. Host-side work that merely
+*builds* a compiled program (autotune cache lookups at trace time) is
+the intended waiver case — the baseline carries those with reasons.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.findings import Finding
+from repro.analysis.model import chain_of
+from repro.analysis.threads import resolve_chain
+
+EXPLAIN = __doc__
+
+_JIT_CTORS = {"jax.jit"}
+_PALLAS_CTORS = {"jax.experimental.pallas.pallas_call"}
+_PARTIAL = {"functools.partial"}
+_EFFECT_PREFIXES = ("time.", "random.", "threading.", "numpy.random.")
+_EFFECT_METHODS = {"read_text", "write_text", "open", "print"}
+_EVENTLOG_METHODS = {"log", "log_transfer", "log_batch_span",
+                     "log_batch_transfers"}
+
+
+def _resolve_callable_arg(program, fn, node: ast.AST) -> str | None:
+    """A callable expression -> function qualname (Name/Attribute,
+    lambda, or functools.partial(F, ...) unwrapped one level)."""
+    if isinstance(node, ast.Lambda):
+        return fn.local_funcs.get(f"<lambda:{node.lineno}>")
+    if isinstance(node, ast.Call):
+        pchain = chain_of(node.func)
+        if pchain:
+            pres = resolve_chain(program, fn, pchain)
+            if pres and pres[0] == "external" and pres[1] in _PARTIAL \
+                    and node.args:
+                return _resolve_callable_arg(program, fn, node.args[0])
+        return None
+    chain = chain_of(node)
+    if chain is None:
+        return None
+    res = resolve_chain(program, fn, chain)
+    return res[1] if res and res[0] == "fn" else None
+
+
+def _seeds(program) -> set[str]:
+    seeds: set[str] = set()
+    for fn in program.functions.values():
+        # decorators: @jax.jit and @functools.partial(jax.jit, ...)
+        for dec in fn.decorators:
+            target = dec.func if isinstance(dec, ast.Call) else dec
+            chain = chain_of(target)
+            res = resolve_chain(program, fn, chain) if chain else None
+            dotted = res[1] if res and res[0] == "external" else None
+            if dotted in _JIT_CTORS:
+                seeds.add(fn.qualname)
+            elif dotted in _PARTIAL and isinstance(dec, ast.Call) \
+                    and dec.args:
+                inner = chain_of(dec.args[0])
+                ires = resolve_chain(program, fn, inner) if inner else None
+                if ires and ires[0] == "external" \
+                        and ires[1] in _JIT_CTORS:
+                    seeds.add(fn.qualname)
+        # call sites: jax.jit(f) / pl.pallas_call(kernel, ...)
+        for site in fn.calls:
+            res = resolve_chain(program, fn, site.chain)
+            if res is None or res[0] != "external":
+                continue
+            if res[1] in _JIT_CTORS | _PALLAS_CTORS:
+                args = list(site.node.args) \
+                    + [kw.value for kw in site.node.keywords
+                       if kw.arg in (None, "fun", "kernel", "f")]
+                if args:
+                    tgt = _resolve_callable_arg(program, fn, args[0])
+                    if tgt:
+                        seeds.add(tgt)
+    return seeds
+
+
+def _effects_in(program, fn) -> list[tuple[str, int]]:
+    """(sink description, lineno) for every host effect in ``fn``."""
+    out = []
+    for site in fn.calls:
+        chain = site.chain
+        res = resolve_chain(program, fn, chain)
+        if res and res[0] == "external":
+            dotted = res[1]
+            if dotted.startswith(_EFFECT_PREFIXES):
+                out.append((dotted, site.lineno))
+                continue
+        if res and res[0] == "fn" \
+                and ".EventLog." in res[1]:
+            out.append((res[1], site.lineno))
+            continue
+        name = chain[-1]
+        if len(chain) == 1 and name in ("open", "print"):
+            mod = program.modules.get(fn.module)
+            if res is None and name not in fn.local_funcs \
+                    and (mod is None or name not in mod.functions):
+                out.append((name, site.lineno))
+            continue
+        if res is None and name in _EFFECT_METHODS:
+            out.append((f"*.{name}", site.lineno))
+            continue
+        if res is None and name in _EVENTLOG_METHODS and len(chain) >= 2:
+            out.append((f"*.{name}", site.lineno))
+    return out
+
+
+def check(program, graph, sources) -> list[Finding]:
+    seeds = _seeds(program)
+    reached: set[str] = set(seeds)
+    work = list(seeds)
+    while work:
+        cur = work.pop()
+        for e in graph.edges.get(cur, []):
+            if e.callee not in reached:
+                reached.add(e.callee)
+                work.append(e.callee)
+
+    out: list[Finding] = []
+    seen: set[tuple] = set()
+    for qual in sorted(reached):
+        fn = program.functions.get(qual)
+        if fn is None:
+            continue
+        short = qual[len(fn.module) + 1:] if fn.module else qual
+        for sink, line in _effects_in(program, fn):
+            key = (qual, sink)
+            if key in seen:
+                continue
+            seen.add(key)
+            via = " (jit/pallas seed)" if qual in seeds else \
+                " (reachable from a jit/pallas seed)"
+            out.append(Finding(
+                rule="jit-purity-check", path=fn.rel, line=line,
+                ident=f"{short}:{sink}",
+                message=(f"'{short}'{via} reaches host side effect "
+                         f"'{sink}' — traced programs must be pure; "
+                         "hoist it out or waive with a reason"),
+                detail={"sink": sink}))
+    return out

@@ -1,0 +1,116 @@
+"""lock-order-check: the cross-class lock acquisition graph is acyclic.
+
+Whenever a function acquires lock B while holding lock A — lexically
+(nested ``with``), or by calling, directly or transitively, a function
+that acquires B — the graph gains an edge A -> B. A cycle in that
+graph is a potential deadlock: two threads entering the cycle from
+different points can each hold the lock the other needs. The locks in
+play are the cluster's ``ServingCluster._lock``, the topic's
+``ConsumerGroup._lock`` / ``LivePartition._rr_lock`` and the
+pipeline's ``_ident_lock`` / ``_stats_lock``; lock identity is
+``(ClassName, attr)``, so every instance of a class shares one node —
+conservative, which is the right direction for deadlock detection.
+
+Call edges propagate through the resolved call graph's acquire
+closure: a call made under lock A to a function whose closure acquires
+B contributes A -> B even when the ``with B`` is three frames down.
+"""
+from __future__ import annotations
+
+from repro.analysis.findings import Finding
+
+EXPLAIN = __doc__
+
+
+def _acquire_closure(graph) -> dict[str, set[str]]:
+    """fn qualname -> every lock token its call closure can acquire."""
+    clo = {q: {tok for tok, _held, _ln in evs}
+           for q, evs in graph.acquires.items()}
+    changed = True
+    while changed:
+        changed = False
+        for q, edges in graph.edges.items():
+            cur = clo.setdefault(q, set())
+            for e in edges:
+                extra = clo.get(e.callee)
+                if extra and not extra <= cur:
+                    cur |= extra
+                    changed = True
+    return clo
+
+
+def check(program, graph, sources) -> list[Finding]:
+    clo = _acquire_closure(graph)
+
+    # lock-token digraph with one evidence site per edge
+    succ: dict[str, set[str]] = {}
+    evidence: dict[tuple[str, str], tuple[str, int]] = {}
+
+    def add(a: str, b: str, rel: str, line: int) -> None:
+        if a == b:
+            return               # re-entry on one lock is RLock's job
+        succ.setdefault(a, set()).add(b)
+        evidence.setdefault((a, b), (rel, line))
+
+    for q, evs in graph.acquires.items():
+        fn = program.functions[q]
+        for tok, held, line in evs:
+            for h in held:
+                add(h, tok, fn.rel, line)
+    for q, edges in graph.edges.items():
+        fn = program.functions[q]
+        ctx = graph.ctx_locks.get(q, frozenset())
+        for e in edges:
+            if e.kind != "call":
+                continue
+            held = set(e.held) | ctx
+            if not held:
+                continue
+            for tok in clo.get(e.callee, ()):
+                for h in held:
+                    add(h, tok, fn.rel, e.lineno)
+
+    # cycle detection (iterative DFS, colored); each cycle reported
+    # once under its lexicographically-smallest rotation
+    out: list[Finding] = []
+    seen_cycles: set[tuple] = set()
+    color: dict[str, int] = {}       # 1 = on stack, 2 = done
+
+    def dfs(start: str) -> None:
+        stack = [(start, iter(sorted(succ.get(start, ()))))]
+        path = [start]
+        color[start] = 1
+        while stack:
+            node, it = stack[-1]
+            nxt = next(it, None)
+            if nxt is None:
+                color[node] = 2
+                stack.pop()
+                path.pop()
+                continue
+            c = color.get(nxt, 0)
+            if c == 0:
+                color[nxt] = 1
+                stack.append((nxt, iter(sorted(succ.get(nxt, ())))))
+                path.append(nxt)
+            elif c == 1:
+                cyc = tuple(path[path.index(nxt):])
+                k = min(range(len(cyc)), key=lambda i: cyc[i])
+                norm = cyc[k:] + cyc[:k]
+                if norm in seen_cycles:
+                    continue
+                seen_cycles.add(norm)
+                rel, line = evidence[(norm[-1], norm[0])]
+                order = " -> ".join(norm + (norm[0],))
+                out.append(Finding(
+                    rule="lock-order-check", path=rel, line=line,
+                    ident=f"cycle:{'->'.join(norm)}",
+                    message=(f"lock acquisition cycle {order} — "
+                             "threads entering at different points "
+                             "can deadlock"),
+                    detail={"cycle": list(norm)}))
+
+    for node in sorted(succ):
+        if color.get(node, 0) == 0:
+            dfs(node)
+    return out

@@ -1,0 +1,61 @@
+"""race-check: unguarded shared-state writes in thread-reachable code.
+
+The serving cluster and the streaming pipeline mutate shared counters
+from worker threads; the repo's convention is that every such write is
+either (a) under a ``with self._lock`` whose lock the class owns,
+(b) a write to a threading primitive (events/queues synchronize
+themselves), or (c) explicitly waived with a reason. This checker
+flags, in every function reachable from a thread entry point:
+
+  * ``self.X = / += / self.X[k] =`` writes with no lock held — unless
+    ``X`` is a threading primitive attribute of the class;
+  * augmented writes through ANY receiver (``part.consumed += 1``,
+    ``st.served += 1``): read-modify-write on a shared object is racy
+    no matter whose attribute it is.
+
+"Lock held" counts both the lexical ``with`` context at the write and
+the interprocedural lock-context fixpoint (a method called only by
+holders of ``_lock`` is guarded even with no ``with`` of its own).
+``__init__`` is exempt: construction happens-before any thread start.
+"""
+from __future__ import annotations
+
+from repro.analysis.findings import Finding
+
+EXPLAIN = __doc__
+
+# plain (non-aug) assigns to non-self receivers are single atomic
+# stores into objects the caller hands over (message fields, fresh
+# stats objects) — not flagged; aug-assign read-modify-writes are.
+_SELF_KINDS = ("assign", "aug", "subscript")
+
+
+def check(program, graph, sources) -> list[Finding]:
+    out: list[Finding] = []
+    for qual in sorted(graph.thread_reachable):
+        fn = program.functions.get(qual)
+        if fn is None or fn.name == "__init__":
+            continue
+        cm = program.classes.get(f"{fn.module}.{fn.cls}") if fn.cls \
+            else None
+        short = qual[len(fn.module) + 1:] if fn.module else qual
+        for w in fn.writes:
+            if w.receiver == "self":
+                if cm is not None and w.attr in cm.primitive_attrs:
+                    continue
+                if w.kind not in _SELF_KINDS:
+                    continue
+            elif w.kind != "aug":
+                continue
+            if graph.held_at(fn, w.held):
+                continue
+            tgt = f"{w.receiver}.{w.attr}"
+            out.append(Finding(
+                rule="race-check", path=fn.rel, line=w.lineno,
+                ident=f"{short}:{tgt}",
+                message=(f"'{tgt}' written without a lock in "
+                         f"thread-reachable '{short}' — guard it, make "
+                         "it a threading primitive, or waive with a "
+                         "reason"),
+                detail={"kind": w.kind}))
+    return out

@@ -1,0 +1,142 @@
+"""tax-stage-check: every logged stage name resolves through the
+canonical table.
+
+The five-way attribution ({pre, ai, post, transfer, queue}) is only
+trustworthy if every stage string handed to the EventLog sinks —
+``log``, ``log_batch_span``, ``log_transfer(stage=...)``, ``Timer`` —
+resolves through ``repro.core.events.STAGE_CATEGORIES`` (or its
+prefix/suffix conventions). A stage that does not resolve would
+silently land in the residual "pre" bucket and skew every figure built
+on the breakdown. This checker validates, statically:
+
+  * string literals in a sink's stage slot:
+    ``categorize(name, default=None)`` must not be None;
+  * f-strings: a constant tail matching a ``/phase`` suffix or a
+    constant head matching ``pre_``/``post_`` passes; otherwise the
+    site is skipped (dynamic — the runtime guards cover it);
+  * wrappers: a function whose parameter flows verbatim into a sink's
+    stage slot becomes a sink itself (``PreprocessStage._log_span``),
+    so its call sites are checked the same way.
+
+Receivers that resolve to external modules (``math.log``, ``jnp.log``)
+are excluded by import-table resolution, not by name.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.findings import Finding
+from repro.analysis.model import FunctionModel, chain_of
+from repro.analysis.threads import resolve_chain
+from repro.core.events import (STAGE_PREFIXES, STAGE_SUFFIXES,
+                               categorize)
+
+EXPLAIN = __doc__
+
+# method name -> index of the stage argument among positional args
+# (None = keyword-only); receiver resolution filters out externals.
+_SINKS = {"log": 1, "log_batch_span": 1, "log_transfer": None,
+          "Timer": 2}
+_TIMER_HOME = "repro.core.events"
+
+
+def _stage_arg(node: ast.Call, pos: int | None) -> ast.AST | None:
+    for kw in node.keywords:
+        if kw.arg == "stage":
+            return kw.value
+    if pos is not None and len(node.args) > pos:
+        return node.args[pos]
+    return None
+
+
+def _check_value(val: ast.AST) -> str | None:
+    """Return the offending stage string, or None when the value is
+    valid or undecidable (dynamic)."""
+    if isinstance(val, ast.Constant) and isinstance(val.value, str):
+        return val.value if categorize(val.value, default=None) is None \
+            else None
+    if isinstance(val, ast.JoinedStr) and val.values:
+        last = val.values[-1]
+        if isinstance(last, ast.Constant) and isinstance(last.value, str):
+            tail = last.value
+            if any(tail.endswith(s) for s in STAGE_SUFFIXES):
+                return None
+            if "wait" in tail:
+                return None
+        first = val.values[0]
+        if isinstance(first, ast.Constant) and isinstance(first.value, str):
+            head = first.value
+            if any(head.startswith(p) for p in STAGE_PREFIXES):
+                return None
+            if "wait" in head:
+                return None
+        if isinstance(last, ast.Constant) and isinstance(last.value, str) \
+                and "/" in last.value:
+            # a constant /suffix that matched nothing canonical
+            return f"...{last.value}"
+        return None               # fully dynamic — runtime guards own it
+    return None
+
+
+def _is_sink_call(program, fn: FunctionModel, site) -> int | None:
+    """Stage-arg position if this call site is an EventLog-family sink."""
+    name = site.chain[-1]
+    if name not in _SINKS:
+        return None
+    res = resolve_chain(program, fn, site.chain)
+    if res is not None and res[0] == "external" \
+            and not res[1].startswith("repro."):
+        return None               # math.log / jnp.log / np.log
+    if name == "Timer":
+        # only the events.Timer; any other Timer class is not a sink
+        if res is None or res[0] != "fn" \
+                or not res[1].startswith(_TIMER_HOME):
+            return None
+    return _SINKS[name]
+
+
+def _wrapper_sinks(program, graph) -> dict[str, int]:
+    """fn qualname -> positional index of its stage-forwarding param."""
+    out: dict[str, int] = {}
+    for fn in program.functions.values():
+        for site in fn.calls:
+            pos = _is_sink_call(program, fn, site)
+            if pos is None:
+                continue
+            val = _stage_arg(site.node, pos)
+            if isinstance(val, ast.Name) and val.id in fn.params:
+                out[fn.qualname] = fn.params.index(val.id)
+    return out
+
+
+def check(program, graph, sources) -> list[Finding]:
+    wrappers = _wrapper_sinks(program, graph)
+    out: list[Finding] = []
+    seen: set[tuple] = set()
+    for fn in program.functions.values():
+        short = fn.qualname[len(fn.module) + 1:] if fn.module \
+            else fn.qualname
+        for site in fn.calls:
+            pos = _is_sink_call(program, fn, site)
+            if pos is None:
+                res = resolve_chain(program, fn, site.chain)
+                if res is None or res[0] != "fn" \
+                        or res[1] not in wrappers:
+                    continue
+                pos = wrappers[res[1]]
+            bad = _check_value(_stage_arg(site.node, pos))
+            if bad is None:
+                continue
+            key = (fn.rel, short, bad)
+            if key in seen:
+                continue
+            seen.add(key)
+            out.append(Finding(
+                rule="tax-stage-check", path=fn.rel, line=site.lineno,
+                ident=f"{short}:{bad}",
+                message=(f"stage {bad!r} logged in '{short}' does not "
+                         "resolve through repro.core.events."
+                         "STAGE_CATEGORIES — it would silently land in "
+                         "the residual 'pre' bucket"),
+                detail={"stage": bad}))
+    return out

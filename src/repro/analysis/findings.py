@@ -1,0 +1,34 @@
+"""Finding records: what the checkers emit, how results serialize.
+
+A finding's ``ident`` is a *stable, line-free* identifier (qualified
+symbol plus the offending detail) so waivers in the committed baseline
+keep matching across unrelated edits; the line number is carried for
+human navigation only and never participates in matching.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class Finding:
+    """One rule violation at one site."""
+    rule: str                 # e.g. "race-check"
+    path: str                 # root-relative posix path of the module
+    line: int                 # 1-based line (navigation only)
+    ident: str                # stable id, e.g. "BrokerWriter.run:self.busy"
+    message: str              # human sentence
+    detail: dict = field(default_factory=dict)   # rule-specific extras
+
+    @property
+    def key(self) -> tuple[str, str, str]:
+        """The (rule, path, ident) triple waivers match on."""
+        return (self.rule, self.path, self.ident)
+
+    def to_dict(self) -> dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "ident": self.ident, "message": self.message,
+                **({"detail": self.detail} if self.detail else {})}
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"

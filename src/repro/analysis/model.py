@@ -1,0 +1,399 @@
+"""Per-module / per-class / per-function models over the raw ASTs.
+
+One visitor pass per module extracts everything the four checkers
+need, resolved no further than names allow *locally*:
+
+  * import tables (``import x as y`` aliases, ``from m import n``);
+  * per class: methods, base-class chains, and the attribute model —
+    which ``self.X`` attributes are locks (``threading.Lock/RLock/
+    Condition``), which are other threading primitives (events,
+    queues), and which hold instances of repo classes
+    (``self.group = ConsumerGroup(...)`` gives ``group`` the type
+    ``ConsumerGroup``);
+  * per function/method (plus nested defs and lambdas): attribute
+    writes with the lexically-held ``with``-lock context, every call
+    site with its receiver chain, bare function references (callbacks
+    like ``Thread(target=self._replica)``), and local-variable types
+    from ``x = ClassName(...)`` assignments.
+
+Cross-module resolution (receiver chain -> concrete method) happens in
+:mod:`repro.analysis.threads`, which sees the whole
+:class:`Program` at once.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+
+from repro.analysis.loader import SourceModule
+
+# constructor chains that make an attribute a lock / a threading
+# primitive (dotted form, after alias resolution)
+LOCK_CTORS = {"threading.Lock", "threading.RLock", "threading.Condition"}
+PRIMITIVE_CTORS = LOCK_CTORS | {
+    "threading.Event", "threading.Semaphore", "threading.BoundedSemaphore",
+    "threading.Barrier", "queue.Queue", "queue.SimpleQueue",
+    "queue.LifoQueue", "queue.PriorityQueue", "collections.deque",
+}
+
+
+def chain_of(node: ast.AST) -> tuple[str, ...] | None:
+    """``a.b.c`` -> ("a", "b", "c"); None when the root isn't a Name.
+
+    ``self.topic.publish`` becomes ("self", "topic", "publish");
+    anything rooted in a call/subscript result is unresolvable and
+    returns None (the checkers then skip or fall back by method name).
+    """
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return None
+
+
+@dataclass
+class CallSite:
+    chain: tuple[str, ...]
+    lineno: int
+    held: tuple                      # receiver chains of held with-locks
+    node: ast.Call
+
+
+@dataclass
+class RefSite:
+    """A bare reference to a callable (callback / iteration target)."""
+    chain: tuple[str, ...]
+    lineno: int
+
+
+@dataclass
+class AttrWrite:
+    receiver: str                    # "self" or a local/param name
+    attr: str
+    kind: str                        # assign | aug | subscript
+    lineno: int
+    held: tuple                      # receiver chains of held with-locks
+
+
+@dataclass
+class FunctionModel:
+    module: str
+    rel: str
+    cls: str | None                  # owning class name, None for functions
+    name: str
+    qualname: str                    # module.Class.name / module.name
+    node: ast.AST
+    params: list[str] = field(default_factory=list)   # excludes self
+    writes: list[AttrWrite] = field(default_factory=list)
+    calls: list[CallSite] = field(default_factory=list)
+    refs: list[RefSite] = field(default_factory=list)
+    # with-enter events: (lock chain, held-before snapshot, lineno)
+    acquired: list[tuple] = field(default_factory=list)
+    local_types: dict[str, str] = field(default_factory=dict)
+    local_funcs: dict[str, str] = field(default_factory=dict)
+    decorators: list = field(default_factory=list)    # raw decorator nodes
+
+
+@dataclass
+class ClassModel:
+    module: str
+    rel: str
+    name: str
+    qualname: str
+    bases: list[tuple[str, ...]] = field(default_factory=list)
+    methods: dict[str, FunctionModel] = field(default_factory=dict)
+    lock_attrs: set[str] = field(default_factory=set)
+    primitive_attrs: set[str] = field(default_factory=set)
+    attr_types: dict[str, str] = field(default_factory=dict)
+
+
+@dataclass
+class ModuleModel:
+    src: SourceModule
+    import_alias: dict[str, str] = field(default_factory=dict)
+    from_names: dict[str, tuple[str, str]] = field(default_factory=dict)
+    functions: dict[str, FunctionModel] = field(default_factory=dict)
+    classes: dict[str, ClassModel] = field(default_factory=dict)
+    global_types: dict[str, str] = field(default_factory=dict)
+
+
+@dataclass
+class Program:
+    """The whole analyzed tree, cross-indexed for the checkers."""
+    modules: dict[str, ModuleModel] = field(default_factory=dict)
+    functions: dict[str, FunctionModel] = field(default_factory=dict)
+    classes: dict[str, ClassModel] = field(default_factory=dict)
+    # method name -> qualnames of every method with that name (the
+    # exactly-one fallback for unresolvable receivers)
+    method_index: dict[str, list[str]] = field(default_factory=dict)
+    class_by_name: dict[str, list[str]] = field(default_factory=dict)
+
+    def class_of(self, qualname: str) -> ClassModel | None:
+        return self.classes.get(qualname)
+
+
+class _FunctionVisitor(ast.NodeVisitor):
+    """Fills one FunctionModel; maintains the lexical with-lock stack."""
+
+    def __init__(self, fn: FunctionModel, collector: "_ModuleCollector"):
+        self.fn = fn
+        self.col = collector
+        self.held: list[tuple[str, ...]] = []
+
+    # ---- helpers -----------------------------------------------------------
+
+    def _snapshot(self) -> tuple:
+        return tuple(self.held)
+
+    def _record_write(self, target: ast.AST, kind: str) -> None:
+        if isinstance(target, ast.Attribute):
+            chain = chain_of(target)
+            if chain and len(chain) == 2:
+                self.fn.writes.append(AttrWrite(
+                    chain[0], chain[1], kind, target.lineno,
+                    self._snapshot()))
+        elif isinstance(target, ast.Subscript):
+            chain = chain_of(target.value)
+            if chain and len(chain) == 2 and chain[0] == "self":
+                self.fn.writes.append(AttrWrite(
+                    chain[0], chain[1], "subscript", target.lineno,
+                    self._snapshot()))
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for el in target.elts:
+                self._record_write(el, kind)
+
+    def _record_local_type(self, targets: list, value: ast.AST) -> None:
+        if not isinstance(value, ast.Call):
+            return
+        ctor = chain_of(value.func)
+        if ctor is None:
+            return
+        resolved = self.col.resolve_ctor(ctor)
+        if resolved is None:
+            return
+        for t in targets:
+            if isinstance(t, ast.Name):
+                self.fn.local_types[t.id] = resolved
+
+    # ---- statements --------------------------------------------------------
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        for t in node.targets:
+            self._record_write(t, "assign")
+        self._record_local_type(node.targets, node.value)
+        self.generic_visit(node)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
+        if node.value is not None:
+            self._record_write(node.target, "assign")
+            self._record_local_type([node.target], node.value)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self._record_write(node.target, "aug")
+        self.generic_visit(node)
+
+    def visit_With(self, node: ast.With) -> None:
+        pushed = 0
+        for item in node.items:
+            chain = chain_of(item.context_expr)
+            if chain is not None and len(chain) >= 2:
+                self.fn.acquired.append(
+                    (chain, self._snapshot(), item.context_expr.lineno))
+                self.held.append(chain)
+                pushed += 1
+            else:
+                self.visit(item.context_expr)
+        for stmt in node.body:
+            self.visit(stmt)
+        if pushed:
+            del self.held[-pushed:]
+
+    def visit_Call(self, node: ast.Call) -> None:
+        chain = chain_of(node.func)
+        if chain is not None:
+            self.fn.calls.append(CallSite(chain, node.lineno,
+                                          self._snapshot(), node))
+        for arg in list(node.args) + [kw.value for kw in node.keywords]:
+            c = chain_of(arg)
+            if c is not None and len(c) >= 1:
+                self.fn.refs.append(RefSite(c, node.lineno))
+        self.generic_visit(node)
+
+    def visit_For(self, node: ast.For) -> None:
+        c = chain_of(node.iter)
+        if c is not None:
+            # iterating an object invokes its __iter__ (Batcher loops)
+            self.fn.calls.append(CallSite(c + ("__iter__",), node.lineno,
+                                          self._snapshot(),
+                                          ast.Call(func=node.iter, args=[],
+                                                   keywords=[])))
+        self.generic_visit(node)
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self.col.add_function(node, cls=self.fn.cls, parent=self.fn)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Lambda(self, node: ast.Lambda) -> None:
+        self.col.add_function(node, cls=self.fn.cls, parent=self.fn)
+
+
+class _ModuleCollector:
+    """Builds the ModuleModel (and registers into the Program)."""
+
+    def __init__(self, src: SourceModule, program: Program):
+        self.src = src
+        self.program = program
+        self.mod = ModuleModel(src=src)
+        program.modules[src.name] = self.mod
+
+    # ---- resolution helpers ------------------------------------------------
+
+    def dotted(self, chain: tuple[str, ...]) -> str | None:
+        """Resolve a chain's root through the import tables -> dotted
+        external/stdlib path ("threading.Lock"), or None."""
+        root = chain[0]
+        if root in self.mod.import_alias:
+            return ".".join((self.mod.import_alias[root],) + chain[1:])
+        if root in self.mod.from_names:
+            m, orig = self.mod.from_names[root]
+            return ".".join((m, orig) + chain[1:])
+        return None
+
+    def resolve_ctor(self, ctor: tuple[str, ...]) -> str | None:
+        """Constructor chain -> class identity: a repo class qualname,
+        or a dotted external name ("threading.Thread")."""
+        if len(ctor) == 1:
+            name = ctor[0]
+            if name in self.mod.classes:
+                return self.mod.classes[name].qualname
+            if name in self.mod.from_names:
+                m, orig = self.mod.from_names[name]
+                return f"{m}.{orig}"
+            return None
+        return self.dotted(ctor)
+
+    # ---- collection --------------------------------------------------------
+
+    def add_function(self, node, cls: str | None = None,
+                     parent: FunctionModel | None = None) -> FunctionModel:
+        if isinstance(node, ast.Lambda):
+            name = f"<lambda:{node.lineno}>"
+            params = [a.arg for a in node.args.args]
+            decorators: list = []
+        else:
+            name = node.name
+            params = [a.arg for a in node.args.args if a.arg != "self"]
+            decorators = list(node.decorator_list)
+        scope = (f"{cls}." if cls and parent is None else "")
+        if parent is not None:
+            # nest under the parent's module-relative qualname
+            prefix = parent.qualname[len(self.src.name) + 1:] \
+                if self.src.name else parent.qualname
+            scope = f"{prefix}."
+        qualname = f"{self.src.name}.{scope}{name}" if self.src.name \
+            else f"{scope}{name}"
+        fn = FunctionModel(module=self.src.name, rel=self.src.rel,
+                           cls=cls if parent is None else None,
+                           name=name, qualname=qualname, node=node,
+                           params=params, decorators=decorators)
+        self.program.functions[qualname] = fn
+        if parent is not None:
+            parent.local_funcs[name] = qualname
+        v = _FunctionVisitor(fn, self)
+        body = node.body if isinstance(node.body, list) else [node.body]
+        for stmt in body:
+            v.visit(stmt)
+        return fn
+
+    def add_class(self, node: ast.ClassDef) -> None:
+        qualname = f"{self.src.name}.{node.name}"
+        cm = ClassModel(module=self.src.name, rel=self.src.rel,
+                        name=node.name, qualname=qualname)
+        for base in node.bases:
+            c = chain_of(base)
+            if c is not None:
+                cm.bases.append(c)
+        self.mod.classes[node.name] = cm
+        self.program.classes[qualname] = cm
+        self.program.class_by_name.setdefault(node.name, []).append(qualname)
+        # pass 1: the attribute model, over every method's self.X = ctor
+        for stmt in node.body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._scan_attr_types(cm, stmt)
+        # pass 2: full function models
+        for stmt in node.body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                fn = self.add_function(stmt, cls=node.name)
+                cm.methods[stmt.name] = fn
+                self.program.method_index.setdefault(
+                    stmt.name, []).append(fn.qualname)
+
+    def _scan_attr_types(self, cm: ClassModel, method: ast.AST) -> None:
+        for sub in ast.walk(method):
+            if not isinstance(sub, ast.Assign):
+                continue
+            if not isinstance(sub.value, ast.Call):
+                continue
+            ctor = chain_of(sub.value.func)
+            resolved = self.resolve_ctor(ctor) if ctor else None
+            if resolved is None:
+                continue
+            for t in sub.targets:
+                c = chain_of(t) if isinstance(t, ast.Attribute) else None
+                if c and len(c) == 2 and c[0] == "self":
+                    cm.attr_types[c[1]] = resolved
+                    if resolved in LOCK_CTORS:
+                        cm.lock_attrs.add(c[1])
+                    if resolved in PRIMITIVE_CTORS:
+                        cm.primitive_attrs.add(c[1])
+
+    def collect(self) -> None:
+        for stmt in self.src.tree.body:
+            if isinstance(stmt, ast.Import):
+                for a in stmt.names:
+                    self.mod.import_alias[a.asname or
+                                          a.name.split(".")[0]] = a.name
+            elif isinstance(stmt, ast.ImportFrom):
+                if stmt.module is None:
+                    continue
+                for a in stmt.names:
+                    self.mod.from_names[a.asname or a.name] = (stmt.module,
+                                                               a.name)
+        # function-local imports also feed resolution (ops.matmul's
+        # lazy "from repro.kernels import autotune" pattern)
+        for sub in ast.walk(self.src.tree):
+            if isinstance(sub, ast.ImportFrom) and sub.module:
+                for a in sub.names:
+                    self.mod.from_names.setdefault(
+                        a.asname or a.name, (sub.module, a.name))
+            elif isinstance(sub, ast.Import):
+                for a in sub.names:
+                    self.mod.import_alias.setdefault(
+                        a.asname or a.name.split(".")[0], a.name)
+        for stmt in self.src.tree.body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                fn = self.add_function(stmt)
+                self.mod.functions[stmt.name] = fn
+            elif isinstance(stmt, ast.ClassDef):
+                self.add_class(stmt)
+            elif isinstance(stmt, ast.Assign):
+                if isinstance(stmt.value, ast.Call):
+                    ctor = chain_of(stmt.value.func)
+                    resolved = self.resolve_ctor(ctor) if ctor else None
+                    if resolved:
+                        for t in stmt.targets:
+                            if isinstance(t, ast.Name):
+                                self.mod.global_types[t.id] = resolved
+
+
+def build_program(sources: list[SourceModule]) -> Program:
+    """Model every module; returns the cross-indexed Program."""
+    program = Program()
+    for src in sources:
+        _ModuleCollector(src, program).collect()
+    return program

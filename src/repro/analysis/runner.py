@@ -1,0 +1,52 @@
+"""Orchestration: load -> model -> graph -> checkers -> waivers.
+
+:func:`run_lint` is the single library entry point; ``scripts/lint.py``
+is a thin CLI over it. Findings come back already filtered through the
+inline waivers and the baseline, with the waiver machinery's own
+meta-findings (``waiver-format``, ``baseline-stale``) merged in — an
+empty list means the tree is clean.
+"""
+from __future__ import annotations
+
+import pathlib
+
+from repro.analysis import waivers as _waivers
+from repro.analysis.checkers import RULES
+from repro.analysis.findings import Finding
+from repro.analysis.loader import SourceModule, load_tree
+from repro.analysis.model import build_program
+from repro.analysis.threads import build_graph
+
+
+def lint_sources(sources: list[SourceModule],
+                 rules: list[str] | None = None) -> list[Finding]:
+    """Run the (selected) checkers over pre-loaded sources; raw
+    findings, inline waivers applied, no baseline."""
+    program = build_program(sources)
+    graph = build_graph(program)
+    findings: list[Finding] = []
+    for rule, (fn, _explain) in RULES.items():
+        if rules is not None and rule not in rules:
+            continue
+        findings.extend(fn(program, graph, sources))
+    findings = _waivers.apply_inline_waivers(findings, sources)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule, f.ident))
+    return findings
+
+
+def run_lint(root: pathlib.Path, package: str | None = "repro",
+             baseline_path: pathlib.Path | None = None,
+             rules: list[str] | None = None) -> list[Finding]:
+    """Lint the tree under ``root``; apply ``baseline_path`` if given.
+
+    Raises ``SyntaxError`` when a file under ``root`` does not parse —
+    the CLI maps that to exit code 2 (internal error), distinct from
+    exit 1 (findings).
+    """
+    sources = load_tree(pathlib.Path(root), package=package)
+    findings = lint_sources(sources, rules=rules)
+    if baseline_path is not None:
+        entries = _waivers.load_baseline(pathlib.Path(baseline_path))
+        findings = _waivers.apply_baseline(findings, entries)
+        findings.sort(key=lambda f: (f.path, f.line, f.rule, f.ident))
+    return findings

@@ -1,0 +1,366 @@
+"""Cross-module call graph, thread reachability, lock-context fixpoint.
+
+This is where receiver chains become concrete methods. Resolution is
+deliberately type-light — just what one AST pass can know:
+
+  * ``self.m()``           -> the same class's method;
+  * ``self.group.join()``  -> through the class attribute model
+    (``self.group = ConsumerGroup(...)`` types ``group``);
+  * ``x = ClassName(...); x.m()`` -> through function local types;
+  * module-level singletons (``_CACHE = TilingCache(...)``) through
+    module global types; imported names through the import tables;
+  * a receiver we cannot type falls back by method *name*, but only
+    when exactly ONE repo class defines that name — ambiguous names
+    produce no edge rather than a flood of false paths;
+  * a receiver typed as an *external* class (``threading.Thread``,
+    ``queue.Queue``) suppresses both the edge and the fallback, so
+    ``t.start()`` on a Thread never reaches a repo class's ``start``.
+
+Thread-entry seeds are ``threading.Thread(target=...)`` call sites
+(the target resolved like any callable reference) plus the ``run``
+method of any ``threading.Thread`` subclass. Reachability closes over
+call edges *and* reference edges (callbacks such as
+``iter(self.next_batch, None)`` and ``Thread(target=self._replica)``).
+
+The lock-context fixpoint answers "which locks are *always* held when
+F runs": ctx(F) = intersection over F's call sites of (locks held at
+the site + ctx(caller)). That is what lets ``ConsumerGroup._rebalance``
+count as guarded — every caller (`join`/`leave`) holds ``_lock``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.analysis.model import (FunctionModel, Program, chain_of)
+
+# external receiver types whose methods never resolve into the repo
+_EXTERNAL_PREFIXES = ("threading.", "queue.", "collections.", "jax.",
+                      "numpy.", "np.", "concurrent.", "subprocess.",
+                      "multiprocessing.")
+
+
+@dataclass
+class Edge:
+    """One resolved call edge (caller is the dict key in Graph.edges)."""
+    callee: str                      # callee qualname
+    lineno: int
+    held: tuple = ()                 # lock tokens held at the call site
+    kind: str = "call"               # call | ref
+
+
+@dataclass
+class Graph:
+    """The resolved program graph the checkers consume."""
+    program: Program
+    edges: dict[str, list[Edge]] = field(default_factory=dict)
+    thread_seeds: set[str] = field(default_factory=set)
+    thread_reachable: set[str] = field(default_factory=set)
+    # qualname -> locks always held when the function runs (fixpoint)
+    ctx_locks: dict[str, frozenset] = field(default_factory=dict)
+    # qualname -> (lock token, held-before tokens, lineno) acquire events
+    acquires: dict[str, list[tuple]] = field(default_factory=dict)
+
+    def held_at(self, fn: FunctionModel, site_held: tuple) -> frozenset:
+        """Effective lock set at a site: lexical holds + caller context."""
+        toks = {t for ch in site_held
+                for t in [_lock_token(self.program, fn, ch)] if t}
+        return frozenset(toks) | self.ctx_locks.get(fn.qualname,
+                                                    frozenset())
+
+
+# ---- receiver-type resolution ---------------------------------------------
+
+def _is_external(resolved: str) -> bool:
+    return resolved.startswith(_EXTERNAL_PREFIXES)
+
+
+def _receiver_type(program: Program, fn: FunctionModel,
+                   root: str) -> str | None:
+    """Type of a chain's root name inside ``fn`` (class qualname or
+    dotted external), or None when untypeable."""
+    if root == "self" and fn.cls:
+        return f"{fn.module}.{fn.cls}"
+    if root in fn.local_types:
+        return fn.local_types[root]
+    mod = program.modules.get(fn.module)
+    if mod and root in mod.global_types:
+        return mod.global_types[root]
+    return None
+
+
+def _class_method(program: Program, cls_qual: str,
+                  name: str) -> str | None:
+    cm = program.classes.get(cls_qual)
+    if cm and name in cm.methods:
+        return cm.methods[name].qualname
+    return None
+
+
+# builtin-collection method names: an untyped receiver with one of
+# these is a list/dict/set/deque, not a repo object — never fall back
+# (repo classes happening to share the name, e.g. the DES Partition's
+# ``append``, must not inherit every stray ``xs.append(...)`` site)
+_BUILTIN_METHODS = {
+    "append", "extend", "insert", "remove", "pop", "popleft",
+    "appendleft", "clear", "sort", "reverse", "add", "discard",
+    "update", "get", "setdefault", "items", "keys", "values", "put",
+    "join", "split", "strip", "format", "copy", "index", "count",
+}
+
+
+def _fallback(program: Program, name: str) -> str | None:
+    """Unique-name fallback: resolve only when exactly one repo class
+    defines a method with this name (else no edge — ambiguity must not
+    flood the graph), and the name isn't a builtin-collection method."""
+    if name in _BUILTIN_METHODS:
+        return None
+    cands = program.method_index.get(name, [])
+    return cands[0] if len(cands) == 1 else None
+
+
+def resolve_chain(program: Program, fn: FunctionModel,
+                  chain: tuple[str, ...]) -> tuple[str, str] | None:
+    """Resolve a call/ref chain to ("fn", qualname) for a repo function
+    or ("external", dotted) for an import-rooted external; None when
+    nothing can be said (the caller may then try the name fallback)."""
+    mod = program.modules.get(fn.module)
+    root = chain[0]
+
+    if len(chain) == 1:
+        if root in fn.local_funcs:
+            return ("fn", fn.local_funcs[root])
+        if mod and root in mod.functions:
+            return ("fn", mod.functions[root].qualname)
+        if mod and root in mod.classes:
+            init = _class_method(program, mod.classes[root].qualname,
+                                 "__init__")
+            return ("fn", init) if init else None
+        if mod and root in mod.from_names:
+            m, orig = mod.from_names[root]
+            tgt = program.modules.get(m)
+            if tgt and orig in tgt.functions:
+                return ("fn", tgt.functions[orig].qualname)
+            if tgt and orig in tgt.classes:
+                init = _class_method(program, tgt.classes[orig].qualname,
+                                     "__init__")
+                if init:
+                    return ("fn", init)
+            return ("external", f"{m}.{orig}")
+        if mod and root in mod.import_alias:
+            return ("external", mod.import_alias[root])
+        return None
+
+    # dotted receiver: type the root, then walk attribute types
+    rtype = _receiver_type(program, fn, root)
+    if rtype is not None:
+        # walk intermediate attributes through the class attr models
+        for attr in chain[1:-1]:
+            if _is_external(rtype):
+                return ("external", f"{rtype}.{attr}")
+            cm = program.classes.get(rtype)
+            nxt = cm.attr_types.get(attr) if cm else None
+            if nxt is None:
+                return None          # untyped hop -> caller may fall back
+            rtype = nxt
+        if _is_external(rtype):
+            return ("external", f"{rtype}.{chain[-1]}")
+        meth = _class_method(program, rtype, chain[-1])
+        if meth:
+            return ("fn", meth)
+        cm = program.classes.get(rtype)
+        if cm is not None:
+            # receiver IS a known repo class but has no such method —
+            # a dataclass field tweak, not a call into the repo graph
+            return ("external", f"{rtype}.{chain[-1]}")
+        return None
+
+    # root is an imported module / name
+    if mod and root in mod.import_alias:
+        dotted = mod.import_alias[root]
+        target = program.modules.get(dotted)
+        if target is not None:
+            if chain[1] in target.functions and len(chain) == 2:
+                return ("fn", target.functions[chain[1]].qualname)
+            if chain[1] in target.classes:
+                cls_qual = target.classes[chain[1]].qualname
+                want = chain[2] if len(chain) >= 3 else "__init__"
+                meth = _class_method(program, cls_qual, want)
+                if meth:
+                    return ("fn", meth)
+        return ("external", ".".join((dotted,) + chain[1:]))
+    if mod and root in mod.from_names:
+        m, orig = mod.from_names[root]
+        dotted = f"{m}.{orig}"
+        target = program.modules.get(dotted)     # from pkg import module
+        if target is not None:
+            if chain[1] in target.functions and len(chain) == 2:
+                return ("fn", target.functions[chain[1]].qualname)
+        holder = program.modules.get(m)          # from module import Class
+        if holder and orig in holder.classes:
+            meth = _class_method(program, holder.classes[orig].qualname,
+                                 chain[1])
+            if meth and len(chain) == 2:
+                return ("fn", meth)
+        return ("external", ".".join((dotted,) + chain[1:]))
+    return None
+
+
+# ---- lock tokens -----------------------------------------------------------
+
+def _lock_token(program: Program, fn: FunctionModel,
+                chain: tuple[str, ...]) -> str | None:
+    """A held-with chain -> "Class.attr" lock token, or None when the
+    chain doesn't end on a known lock attribute."""
+    if len(chain) < 2:
+        return None
+    root, attr = chain[0], chain[-1]
+    rtype = _receiver_type(program, fn, root)
+    if rtype is None or _is_external(rtype):
+        return None
+    for hop in chain[1:-1]:
+        cm = program.classes.get(rtype)
+        nxt = cm.attr_types.get(hop) if cm else None
+        if nxt is None or _is_external(nxt):
+            return None
+        rtype = nxt
+    cm = program.classes.get(rtype)
+    if cm and attr in cm.lock_attrs:
+        return f"{cm.name}.{attr}"
+    return None
+
+
+# ---- graph construction ----------------------------------------------------
+
+def _thread_target_seed(program: Program, fn: FunctionModel,
+                        node) -> str | None:
+    """``threading.Thread(target=X)`` -> X's qualname (if resolvable)."""
+    for kw in node.keywords:
+        if kw.arg != "target":
+            continue
+        chain = chain_of(kw.value)
+        if chain is None:
+            return None
+        res = resolve_chain(program, fn, chain)
+        if res and res[0] == "fn":
+            return res[1]
+        if res is None and len(chain) >= 2:
+            return _fallback(program, chain[-1])
+    return None
+
+
+def _base_is_thread(program: Program, fn_module: str,
+                    base: tuple[str, ...]) -> bool:
+    mod = program.modules.get(fn_module)
+    if mod is None:
+        return False
+    if len(base) == 1 and base[0] in mod.from_names:
+        m, orig = mod.from_names[base[0]]
+        return f"{m}.{orig}" == "threading.Thread"
+    if len(base) >= 2 and base[0] in mod.import_alias:
+        dotted = ".".join((mod.import_alias[base[0]],) + base[1:])
+        return dotted == "threading.Thread"
+    return False
+
+
+def build_graph(program: Program) -> Graph:
+    """Resolve every call/ref site, seed threads, run both fixpoints."""
+    g = Graph(program=program)
+
+    for fn in program.functions.values():
+        out: list[Edge] = []
+        for site in fn.calls:
+            res = resolve_chain(program, fn, site.chain)
+            if res is None and len(site.chain) >= 2 \
+                    and site.chain[0] != "self":
+                fb = _fallback(program, site.chain[-1])
+                res = ("fn", fb) if fb else None
+            if res and res[0] == "fn":
+                out.append(Edge(res[1], site.lineno,
+                                held=tuple(sorted(
+                                    g.held_at(fn, site.held))),
+                                kind="call"))
+            # Thread(target=...) seeds, wherever the ctor resolved to
+            if res and res[0] == "external" \
+                    and res[1] == "threading.Thread":
+                tgt = _thread_target_seed(program, fn, site.node)
+                if tgt:
+                    g.thread_seeds.add(tgt)
+        for ref in fn.refs:
+            res = resolve_chain(program, fn, ref.chain)
+            if res and res[0] == "fn":
+                out.append(Edge(res[1], ref.lineno, kind="ref"))
+        g.edges[fn.qualname] = out
+
+    # Thread subclasses: their run() is a thread entry
+    for cm in program.classes.values():
+        for base in cm.bases:
+            if _base_is_thread(program, cm.module, base) \
+                    and "run" in cm.methods:
+                g.thread_seeds.add(cm.methods["run"].qualname)
+
+    # reachability closure over call + ref edges
+    work = list(g.thread_seeds)
+    g.thread_reachable = set(work)
+    while work:
+        cur = work.pop()
+        for e in g.edges.get(cur, []):
+            if e.callee not in g.thread_reachable:
+                g.thread_reachable.add(e.callee)
+                work.append(e.callee)
+
+    _lock_context_fixpoint(g)
+
+    # acquire events with tokens resolved (for the lock-order checker)
+    for fn in program.functions.values():
+        evs = []
+        for chain, held_before, lineno in fn.acquired:
+            tok = _lock_token(program, fn, chain)
+            if tok:
+                evs.append((tok, g.held_at(fn, held_before), lineno))
+        if evs:
+            g.acquires[fn.qualname] = evs
+    return g
+
+
+def _lock_context_fixpoint(g: Graph) -> None:
+    """ctx(F) = ∩ over call sites of (site-held-locks ∪ ctx(caller)).
+
+    Functions with no incoming call edges (public entry points, thread
+    seeds) get the empty context. Iterates to a fixpoint; the lattice
+    is finite (subsets of the lock-token universe) and the transfer is
+    monotone, so this terminates quickly on trees this size.
+    """
+    program = g.program
+    # incoming: callee -> list of (caller fn, site-held lock tokens)
+    incoming: dict[str, list[tuple[str, frozenset]]] = {}
+    for caller, edges in g.edges.items():
+        for e in edges:
+            if e.kind != "call":
+                continue
+            incoming.setdefault(e.callee, []).append(
+                (caller, frozenset(e.held)))
+
+    all_toks: set[str] = set()
+    for sites in incoming.values():
+        for _, toks in sites:
+            all_toks |= toks
+    top = frozenset(all_toks)
+
+    ctx = {q: (top if q in incoming and q not in g.thread_seeds
+               else frozenset())
+           for q in program.functions}
+    changed = True
+    while changed:
+        changed = False
+        for q, sites in incoming.items():
+            if q in g.thread_seeds:
+                continue
+            new = None
+            for caller, toks in sites:
+                site_set = toks | ctx.get(caller, frozenset())
+                new = site_set if new is None else (new & site_set)
+            new = new if new is not None else frozenset()
+            if new != ctx.get(q):
+                ctx[q] = new
+                changed = True
+    g.ctx_locks = ctx

@@ -1,0 +1,138 @@
+"""Waivers: inline comments and the committed baseline file.
+
+Two ways to accept a finding, both REQUIRING a non-empty reason:
+
+  * inline, on the finding line or the line directly above::
+
+        self.busy = until   # lint: waive race-check -- single owning
+                            # writer thread; read only after join()
+
+    syntax: ``# lint: waive <rule>[,<rule>...] -- <reason>``. ``all``
+    waives every rule at that site. A waiver with no reason (or no
+    ``--`` separator) is itself reported as a ``waiver-format``
+    finding — silent suppressions are exactly what this suite exists
+    to prevent;
+
+  * the committed ``lint_baseline.json``::
+
+        {"waivers": [{"rule": ..., "path": ..., "ident": ...,
+                      "reason": ...}]}
+
+    matched on the stable line-free ``(rule, path, ident)`` key.
+    Entries that no longer match anything are reported as
+    ``baseline-stale`` findings so the file can only shrink as code
+    gets fixed.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import re
+
+from repro.analysis.findings import Finding
+from repro.analysis.loader import SourceModule
+
+_WAIVE_RE = re.compile(
+    r"#\s*lint:\s*waive\s+(?P<rules>[A-Za-z0-9_,\- ]+?)"
+    r"\s*(?:--\s*(?P<reason>.*))?$")
+
+
+def _waiver_on(line: str):
+    """Parse a waiver comment on one source line -> (rules, reason) or
+    None; reason is "" when missing/empty (malformed)."""
+    m = _WAIVE_RE.search(line)
+    if m is None:
+        return None
+    rules = tuple(r.strip() for r in m.group("rules").split(",")
+                  if r.strip())
+    reason = (m.group("reason") or "").strip()
+    return rules, reason
+
+
+def apply_inline_waivers(findings: list[Finding],
+                         sources: list[SourceModule]) -> list[Finding]:
+    """Drop findings waived inline; emit waiver-format findings for
+    malformed (reason-less) waiver comments that matched a finding."""
+    by_rel = {s.rel: s for s in sources}
+    kept: list[Finding] = []
+    malformed: list[Finding] = []
+    for f in findings:
+        src = by_rel.get(f.path)
+        waiver = None
+        wline = f.line
+        if src is not None:
+            waiver = _waiver_on(src.line(f.line))
+            if waiver is None and f.line > 1:
+                prev = src.line(f.line - 1).strip()
+                if prev.startswith("#"):
+                    waiver = _waiver_on(prev)
+                    wline = f.line - 1
+        if waiver is None:
+            kept.append(f)
+            continue
+        rules, reason = waiver
+        if f.rule not in rules and "all" not in rules:
+            kept.append(f)
+            continue
+        if not reason:
+            malformed.append(Finding(
+                rule="waiver-format", path=f.path, line=wline,
+                ident=f"{f.ident}:waiver",
+                message=(f"waiver for [{f.rule}] at {f.ident} has no "
+                         "reason — write '# lint: waive <rule> -- "
+                         "<why this is safe>'")))
+            kept.append(f)          # a malformed waiver waives nothing
+    return kept + malformed
+
+
+def load_baseline(path: pathlib.Path) -> list[dict]:
+    if not path.exists():
+        return []
+    data = json.loads(path.read_text())
+    return list(data.get("waivers", []))
+
+
+def apply_baseline(findings: list[Finding],
+                   entries: list[dict]) -> list[Finding]:
+    """Drop baseline-waived findings; report empty-reason and stale
+    entries as findings themselves."""
+    index = {(e.get("rule"), e.get("path"), e.get("ident")): e
+             for e in entries}
+    used: set[tuple] = set()
+    kept: list[Finding] = []
+    for f in findings:
+        e = index.get(f.key)
+        if e is None:
+            kept.append(f)
+            continue
+        used.add(f.key)
+        if not str(e.get("reason", "")).strip():
+            kept.append(Finding(
+                rule="waiver-format", path=f.path, line=f.line,
+                ident=f"{f.ident}:baseline",
+                message=(f"baseline entry for [{f.rule}] {f.ident} has "
+                         "an empty reason")))
+    for key, e in index.items():
+        if key not in used:
+            kept.append(Finding(
+                rule="baseline-stale", path=str(e.get("path", "?")),
+                line=0, ident=str(e.get("ident", "?")),
+                message=(f"baseline entry [{e.get('rule')}] "
+                         f"{e.get('ident')} no longer matches any "
+                         "finding — remove it")))
+    return kept
+
+
+def write_baseline(path: pathlib.Path, findings: list[Finding],
+                   previous: list[dict]) -> int:
+    """Regenerate the baseline from current findings, preserving
+    reasons already recorded; new entries get a FILL-ME reason that
+    waiver-format will flag until a human writes one."""
+    prev = {(e.get("rule"), e.get("path"), e.get("ident")):
+            str(e.get("reason", "")) for e in previous}
+    entries = []
+    for f in sorted(findings, key=lambda f: f.key):
+        entries.append({"rule": f.rule, "path": f.path, "ident": f.ident,
+                        "reason": prev.get(f.key, "")})
+    path.write_text(json.dumps({"waivers": entries}, indent=2) + "\n")
+    return len(entries)

@@ -99,7 +99,9 @@ class Autoscaler:
         cfg = self.cfg
         rising = (self._prev_backlog is not None
                   and backlog > self._prev_backlog + 1e-9)
-        self._prev_backlog = backlog
+        # one sampling thread (the cluster's autoscale loop) drives
+        # decide()/ _record(); the controller is single-threaded state
+        self._prev_backlog = backlog  # lint: waive race-check -- controller state owned by the single autoscale-loop thread
         if t - self._last_action_t < cfg.cooldown_s:
             return 0
         per = backlog / max(1, n_replicas)
@@ -133,4 +135,4 @@ class Autoscaler:
     def _record(self, t: float, delta: int, n: int, backlog: float,
                 reason: str) -> None:
         self.actions.append(ScaleAction(t, delta, n, backlog, reason))
-        self._last_action_t = t
+        self._last_action_t = t  # lint: waive race-check -- controller state owned by the single autoscale-loop thread

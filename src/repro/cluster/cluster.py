@@ -283,6 +283,10 @@ class ServingCluster:
             self._feeder_threads.append(ft)
             ft.start()
         if sp.autoscale is not None:
+            # build the controller BEFORE the thread exists: attaching
+            # it from inside the loop published self.autoscaler across
+            # threads unlocked (_result() reads it at shutdown)
+            self.autoscaler = sp.autoscale.controller()
             at = threading.Thread(target=self._autoscale_loop, daemon=True)
             self._feeder_threads.append(at)
             at.start()
@@ -306,10 +310,13 @@ class ServingCluster:
             time.sleep(0.05)
 
     def add_replica(self) -> str:
-        name = f"replica-{self._n_spawned}"
-        self._n_spawned += 1
-        st = _ReplicaState(name)
-        self._replica_states[name] = st
+        # under _lock: the autoscaler thread and the fault engine can
+        # both add replicas while the monitor iterates the states
+        with self._lock:
+            name = f"replica-{self._n_spawned}"
+            self._n_spawned += 1
+            st = _ReplicaState(name)
+            self._replica_states[name] = st
         # join the group HERE, not in the replica thread: membership is
         # then synchronous with add/remove calls, so remove_replica()
         # can never race an in-flight join and leave a ghost member
@@ -342,7 +349,7 @@ class ServingCluster:
         group code never learns that elasticity exists (same zero-
         awareness contract as the fault engine)."""
         sp = self.spec
-        ctl = self.autoscaler = sp.autoscale.controller()
+        ctl = self.autoscaler
         from repro.cluster.metrics import percentile
         interval_wall = sp.autoscale.interval_s / sp.time_compression
         horizon = 4 * sp.autoscale.interval_s
@@ -451,7 +458,10 @@ class ServingCluster:
             rid = i + k * sp.n_clients
             k += 1
             evt = threading.Event()
-            self._done_events[rid] = evt
+            # each client thread touches only its own rid keys; the
+            # replica side reads through dict.get on a different key
+            # space per client, and CPython dict setitem is atomic
+            self._done_events[rid] = evt  # lint: waive race-check -- per-client key space, atomic dict setitem, reader uses .get
             if self._produce_one(rid, self._now_model(), rng):
                 evt.wait(timeout=max(
                     0.0, self.wall_deadline - time.perf_counter()))
@@ -575,15 +585,19 @@ class ServingCluster:
         else:
             dur_model = sp.wl.t_identify / sp.speedup * len(batch)
             time.sleep(dur_model / sp.time_compression)
-        st.busy_model += dur_model
+        st.busy_model += dur_model  # lint: waive race-check -- per-replica state; only this replica thread writes it, merged after join
         t_end = self._now_model()
         dt = (t_end - t_deq) / len(batch)
         for j, msg in enumerate(batch):
             self.log.log(msg.key, "identify", t_deq + j * dt,
                          t_deq + (j + 1) * dt,
                          payload_bytes=int(msg.size), batch_size=len(batch))
-            part.consumed += 1
-            st.served += 1
+            # consumed feeds part.in_flight, which _produce_one's
+            # admission check reads under _lock — keep the pair of
+            # counters consistent for bounded admission
+            with self._lock:
+                part.consumed += 1
+            st.served += 1  # lint: waive race-check -- per-replica state; only this replica thread writes it, merged after join
             st.latencies.append(
                 (msg.t_produced, t_deq + (j + 1) * dt - msg.t_produced))
             evt = self._done_events.get(msg.key)

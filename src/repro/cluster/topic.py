@@ -41,8 +41,10 @@ class LivePartition:
         self.bytes_in = 0.0
 
     def deliver(self, msg: Message) -> None:
-        self.produced += 1
-        self.bytes_in += msg.size
+        # single-writer invariant: only the partition's leader
+        # BrokerWriter thread calls deliver
+        self.produced += 1   # lint: waive race-check -- leader BrokerWriter is the only writer; readers tolerate staleness
+        self.bytes_in += msg.size  # lint: waive race-check -- same single-leader-writer invariant as produced
         self.queue.put(msg)
 
     @property
@@ -81,7 +83,9 @@ class BrokerWriter(threading.Thread):
         """Repace the channel at ``n`` drives (fault engine only)."""
         from dataclasses import replace
         n = max(1, min(n, self._base_drives))
-        self.cfg = replace(self.cfg, drives_per_broker=n)
+        # atomic reference swap by design: run() re-reads self.cfg per
+        # chunk, so a degraded channel takes effect at the next write
+        self.cfg = replace(self.cfg, drives_per_broker=n)  # lint: waive race-check -- immutable-config swap; run() reads cfg fresh each chunk
 
     def drop_drive(self) -> None:
         self.set_drives(self.cfg.drives_per_broker - 1)
@@ -115,9 +119,11 @@ class BrokerWriter(threading.Thread):
             dur = sum(self.cfg.write_time(m.size)
                       for _, m in chunk) / self.compress
             start = max(time.perf_counter(), self.free_at)
-            self.free_at = start + dur
-            self.busy += dur
-            self.bytes += sum(
+            # run() is the writer thread itself; these are its private
+            # pacing/throughput counters, read only after join()
+            self.free_at = start + dur  # lint: waive race-check -- owned by this writer thread; read after join
+            self.busy += dur  # lint: waive race-check -- owned by this writer thread; read after join
+            self.bytes += sum(  # lint: waive race-check -- owned by this writer thread; read after join
                 m.size + self.cfg.write_overhead_bytes for _, m in chunk)
             delay = self.free_at - time.perf_counter()
             if delay > 0:

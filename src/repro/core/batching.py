@@ -43,8 +43,10 @@ class BatchStats:
                             for f in fields(self)))
 
     def _count(self, batch_len: int, reason: str) -> None:
-        self.n_batches += 1
-        self.n_items += batch_len
+        # one Batcher (and its stats) per consumer thread by contract;
+        # cross-thread totals go through the associative merge() only
+        self.n_batches += 1  # lint: waive race-check -- per-consumer-thread stats object; aggregation uses merge()
+        self.n_items += batch_len  # lint: waive race-check -- per-consumer-thread stats object; aggregation uses merge()
         setattr(self, f"flush_{reason}", getattr(self, f"flush_{reason}") + 1)
 
 
@@ -127,7 +129,7 @@ class Batcher:
         except queue.Empty:
             return []
         if self.stop is not None and first is self.stop:
-            self._stopped = True
+            self._stopped = True  # lint: waive race-check -- monotonic stop latch; flips one way, any observer order is safe
             return None
         batch = [first]
         deadline = time.perf_counter() + self.timeout_s
@@ -143,7 +145,7 @@ class Batcher:
                 reason = "timeout"
                 break
             if self.stop is not None and item is self.stop:
-                self._stopped = True
+                self._stopped = True  # lint: waive race-check -- monotonic stop latch; flips one way, any observer order is safe
                 reason = "stop"
                 break
             batch.append(item)
@@ -163,7 +165,7 @@ class Batcher:
             except queue.Empty:
                 break
             if self.stop is not None and item is self.stop:
-                self._stopped = True
+                self._stopped = True  # lint: waive race-check -- monotonic stop latch; flips one way, any observer order is safe
                 break
             batch.append(item)
         if batch:

@@ -17,6 +17,57 @@ from dataclasses import dataclass, field
 
 FIVE_WAY = ("pre", "ai", "post", "transfer", "queue")
 
+# Canonical stage -> bucket table: THE single source of truth for the
+# five-way attribution. Every categorizer in the repo resolves through
+# :func:`categorize` (``facerec.stage_category``,
+# ``taxmeter.taxed_stage_category``, the preprocess stage's log guard),
+# and the tax-stage static lint (``repro.analysis``) parses this very
+# assignment — a stage name that is neither listed here nor matched by
+# the prefix/suffix conventions below cannot silently leak into the
+# residual "pre" bucket.
+STAGE_CATEGORIES = {
+    "ingest": "pre",
+    "detect": "ai", "identify": "ai",
+    "prefill": "ai", "decode": "ai",        # serving-engine AI stages
+    "wait": "queue", "wait_frames": "queue", "reject": "queue",
+    "requeue": "queue",   # fault rebalance: in-flight work re-enqueued
+    "transfer": "transfer",
+}
+
+# prefix-typed stages (the preprocess stage self-classifies its spans)
+STAGE_PREFIXES = {"pre_": "pre", "post_": "post"}
+
+# suffix-typed stages (TaxedStep's ``<name>/<phase>`` convention)
+STAGE_SUFFIXES = {"/pre": "pre", "/post": "post", "/compute": "ai",
+                  "/h2d": "transfer", "/d2h": "transfer",
+                  "/wait": "queue"}
+
+
+def categorize(stage: str, default: str | None = "pre") -> str | None:
+    """Canonical stage name -> {pre, ai, post, transfer, queue}.
+
+    Resolution order: exact :data:`STAGE_CATEGORIES` entry, then the
+    suffix convention (TaxedStep's ``<name>/<phase>``), then the prefix
+    convention (``pre_*``/``post_*``), then any stage containing
+    ``wait`` lands in ``queue``. Anything else gets ``default`` — the
+    paper's residual-tax convention is ``"pre"`` (work around the AI
+    that isn't a queue or a crossing is pre/post-processing); pass
+    ``default=None`` to get ``None`` back instead, which is how the
+    tax-stage lint detects stage names that do not resolve through the
+    canonical table at all.
+    """
+    if stage in STAGE_CATEGORIES:
+        return STAGE_CATEGORIES[stage]
+    for suffix, cat in STAGE_SUFFIXES.items():
+        if stage.endswith(suffix):
+            return cat
+    for prefix, cat in STAGE_PREFIXES.items():
+        if stage.startswith(prefix):
+            return cat
+    if "wait" in stage:
+        return "queue"
+    return default
+
 
 def five_way_fractions(per_stage: dict[str, float], category_of,
                        ) -> dict[str, float]:

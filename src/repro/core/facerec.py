@@ -26,35 +26,22 @@ EMBED_DIM = 128     # paper: 128-byte feature vector
 CROP_SIZE = 48      # detection crop window fed to the THUMB resize
 DETECT_POOL = 8     # heatmap downsampling factor (full-res / pool)
 
-# canonical five-way bucket per face-pipeline stage (live pipeline AND
-# DES — both emit these names), used by EventLog.five_way and by the
-# fig06/fig08 benchmarks so figures and runtime share one attribution
-_STAGE_CATEGORY = {
-    "ingest": "pre", "detect": "ai", "identify": "ai",
-    "wait": "queue", "wait_frames": "queue", "reject": "queue",
-    "requeue": "queue",   # fault rebalance: in-flight work re-enqueued
-    "transfer": "transfer",
-}
-
-
 def stage_category(stage: str) -> str:
     """Face-pipeline stage name -> {pre, ai, post, transfer, queue}.
 
-    Prefix-typed stages (``pre_*``/``post_*`` from
+    Thin alias over the canonical table in ``repro.core.events``
+    (:data:`repro.core.events.STAGE_CATEGORIES` +
+    :func:`repro.core.events.categorize`): the live pipeline, the DES
+    and the fig06/fig08 benchmarks all resolve through ONE map, so
+    figures and runtime share one attribution. Prefix-typed stages
+    (``pre_*``/``post_*`` from
     :class:`repro.preprocess.PreprocessStage`) classify themselves;
     unknown supporting stages default to ``pre`` (work around the AI
     that isn't a queue or a crossing is pre/post-processing — the
     paper's residual-tax convention).
     """
-    if stage in _STAGE_CATEGORY:
-        return _STAGE_CATEGORY[stage]
-    if stage.startswith("pre_"):
-        return "pre"
-    if stage.startswith("post_"):
-        return "post"
-    if "wait" in stage:
-        return "queue"
-    return "pre"
+    from repro.core.events import categorize
+    return categorize(stage)
 
 
 def _pad_pow2(n: int) -> int:

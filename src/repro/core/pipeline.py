@@ -253,14 +253,18 @@ class StreamingPipeline:
                                       d2h=Np * thumb_px * 4)
         for (rid, _small, true_boxes, _), centers, faces in zip(
                 items, centers_per, faces_per):
-            self.ground_truth += len(true_boxes)
-            self.detected += len(centers)
-            # match detections to ground truth (within 1.5x blob size)
-            for (ty, tx, ts) in true_boxes:
-                if any(abs(cy - ty / 2) < 1.5 * ts
-                       and abs(cx - tx / 2) < 1.5 * ts
-                       for cy, cx in centers):
-                    self.matched += 1
+            # under _stats_lock: accuracy counters are shared with the
+            # reporting path (stats()), which already reads them locked
+            with self._stats_lock:
+                self.ground_truth += len(true_boxes)
+                self.detected += len(centers)
+                # match detections to ground truth (within 1.5x blob
+                # size)
+                for (ty, tx, ts) in true_boxes:
+                    if any(abs(cy - ty / 2) < 1.5 * ts
+                           and abs(cx - tx / 2) < 1.5 * ts
+                           for cy, cx in centers):
+                        self.matched += 1
             for face in faces:
                 self.faces_topic.put((rid, face, time.perf_counter()))
 

@@ -14,7 +14,7 @@ from dataclasses import dataclass
 import jax
 import numpy as np
 
-from repro.core.events import EventLog, five_way_fractions
+from repro.core.events import EventLog, categorize, five_way_fractions
 
 
 def taxed_stage_category(stage: str) -> str:
@@ -25,19 +25,12 @@ def taxed_stage_category(stage: str) -> str:
     ``<name>/post``); queue waits logged alongside (``wait``/``reject``
     or a ``/wait`` suffix) land in ``queue``. This is the attribution
     the paper-figure benchmarks consume instead of hard-coded stage
-    lists (``fig06``/``fig08``).
+    lists (``fig06``/``fig08``). Resolution happens through the ONE
+    canonical table + suffix rules in ``repro.core.events``
+    (:func:`repro.core.events.categorize`), so this map can never
+    drift from ``facerec.stage_category``.
     """
-    if stage.endswith("/compute"):
-        return "ai"
-    if stage.endswith(("/h2d", "/d2h")):
-        return "transfer"
-    if stage.endswith("/pre"):
-        return "pre"
-    if stage.endswith("/post"):
-        return "post"
-    if "wait" in stage or stage == "reject":
-        return "queue"
-    return "pre"
+    return categorize(stage)
 
 
 @dataclass

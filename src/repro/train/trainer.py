@@ -58,7 +58,11 @@ class Watchdog:
             gap = time.monotonic() - self.last_beat
             if gap > self.timeout:
                 self.hangs.append(gap)
-                self.last_beat = time.monotonic()
+                # beat() stores a fresh monotonic stamp from the
+                # trainer thread; a torn read is impossible for a
+                # float slot and a stale one just delays detection by
+                # one poll interval
+                self.last_beat = time.monotonic()  # lint: waive race-check -- heartbeat timestamp; atomic slot swap, staleness only delays the next hang report
 
     def stop(self):
         self._stop.set()

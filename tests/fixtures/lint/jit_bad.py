@@ -1,0 +1,24 @@
+"""Fixture: host side effects reachable from a jitted function.
+
+Must trip jit-purity-check and ONLY jit-purity-check — one effect
+directly in the decorated function, one two call-hops down.
+"""
+import time
+
+import jax
+
+
+@jax.jit
+def step(x):
+    time.sleep(0.001)                # traced-in host effect
+    return helper(x)
+
+
+def helper(x):
+    return deeper(x)
+
+
+def deeper(x):
+    with open("/tmp/out.txt", "w") as f:   # reachable host I/O
+        f.write("x")
+    return x

@@ -1,0 +1,18 @@
+"""Fixture: pure jitted code next to hosty-but-unjitted code.
+
+Must produce zero findings: the jitted function is pure; the module's
+other function touches the clock but is never reachable from a
+jit/pallas seed.
+"""
+import time
+
+import jax
+
+
+@jax.jit
+def step(x):
+    return x * 2 + 1
+
+
+def host_timer():
+    return time.perf_counter()

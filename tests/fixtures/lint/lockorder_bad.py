@@ -1,0 +1,26 @@
+"""Fixture: inconsistent nesting order over two locks.
+
+Must trip lock-order-check and ONLY lock-order-check (the writes
+inside are lock-guarded, so race-check stays quiet).
+"""
+import threading
+
+
+class Pair:
+    def __init__(self):
+        self.a = 0
+        self.b = 0
+        self._lock_a = threading.Lock()
+        self._lock_b = threading.Lock()
+        self.t = threading.Thread(target=self.forward)
+        self.u = threading.Thread(target=self.backward)
+
+    def forward(self):
+        with self._lock_a:
+            with self._lock_b:
+                self.a += 1
+
+    def backward(self):
+        with self._lock_b:
+            with self._lock_a:
+                self.b += 1

@@ -1,0 +1,29 @@
+"""Fixture: two locks always nested in one order — no cycle.
+
+Must produce zero findings, including across a call edge (the inner
+lock is taken inside a callee while the outer is held).
+"""
+import threading
+
+
+class Pair:
+    def __init__(self):
+        self.a = 0
+        self.b = 0
+        self._lock_a = threading.Lock()
+        self._lock_b = threading.Lock()
+        self.t = threading.Thread(target=self.forward)
+        self.u = threading.Thread(target=self.also_forward)
+
+    def forward(self):
+        with self._lock_a:
+            with self._lock_b:
+                self.a += 1
+
+    def also_forward(self):
+        with self._lock_a:
+            self._inner()
+
+    def _inner(self):
+        with self._lock_b:
+            self.b += 1

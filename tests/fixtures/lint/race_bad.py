@@ -1,0 +1,15 @@
+"""Fixture: unguarded counter write in a thread-reachable method.
+
+Must trip race-check and ONLY race-check.
+"""
+import threading
+
+
+class Worker:
+    def __init__(self):
+        self.count = 0
+        self.t = threading.Thread(target=self._loop)
+
+    def _loop(self):
+        for _ in range(10):
+            self.count += 1          # racy: no lock, not a primitive

@@ -1,0 +1,31 @@
+"""Fixture: the same shape as race_bad, but properly guarded.
+
+Must produce zero findings: one write is lock-guarded, one target is a
+threading primitive, and one method is only ever called with the lock
+held (the interprocedural lock-context rule).
+"""
+import queue
+import threading
+
+
+class Worker:
+    def __init__(self):
+        self.count = 0
+        self._lock = threading.Lock()
+        self.outbox = queue.Queue()
+        self.t = threading.Thread(target=self._loop)
+
+    def _loop(self):
+        for _ in range(10):
+            with self._lock:
+                self.count += 1
+            self.outbox.put(self.count)
+
+    def bump(self):
+        with self._lock:
+            self._bump_locked()
+
+    def _bump_locked(self):
+        # no `with` of its own — guarded because every caller holds
+        # the lock (lock-context fixpoint)
+        self.count += 1

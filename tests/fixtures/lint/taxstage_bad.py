@@ -1,0 +1,10 @@
+"""Fixture: a stage literal that the canonical table cannot place.
+
+Must trip tax-stage-check and ONLY tax-stage-check — "bogus_stage"
+matches no exact entry, no prefix/suffix convention, and contains no
+"wait", so it would silently land in the residual "pre" bucket.
+"""
+
+
+def record(log):
+    log.log(1, "bogus_stage", 0.0, 1.0)

@@ -1,0 +1,16 @@
+"""Fixture: stage names that all resolve through the canonical table.
+
+Must produce zero findings: an exact entry, a prefix-typed name, a
+suffix-typed f-string, a keyword log_transfer stage, and a shadowing
+``math.log``-style call that the import-table resolution must NOT
+mistake for an EventLog sink.
+"""
+import math
+
+
+def record(log, name):
+    log.log(1, "ingest", 0.0, 1.0)
+    log.log(2, "pre_decode", 0.0, 1.0)
+    log.log(3, f"{name}/compute", 0.0, 1.0)
+    log.log_transfer(4, "h2d", 1024, "crop", stage="transfer")
+    return math.log(2.0)

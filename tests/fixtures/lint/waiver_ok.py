@@ -1,0 +1,15 @@
+"""Fixture: a real race finding suppressed by a well-formed waiver.
+
+Must produce zero findings — the waiver names the rule and carries a
+non-empty reason.
+"""
+import threading
+
+
+class Worker:
+    def __init__(self):
+        self.count = 0
+        self.t = threading.Thread(target=self._loop)
+
+    def _loop(self):
+        self.count += 1  # lint: waive race-check -- fixture: single owning thread by contract

@@ -1,0 +1,15 @@
+"""Fixture: a waiver comment with no reason.
+
+Must trip BOTH race-check (a reasonless waiver waives nothing) and
+waiver-format (the malformed waiver is itself a finding).
+"""
+import threading
+
+
+class Worker:
+    def __init__(self):
+        self.count = 0
+        self.t = threading.Thread(target=self._loop)
+
+    def _loop(self):
+        self.count += 1  # lint: waive race-check

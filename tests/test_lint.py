@@ -1,0 +1,138 @@
+"""The static-analysis suite: fixture battery + self-lint.
+
+Two contracts:
+
+  * each ``tests/fixtures/lint/*_bad.py`` snippet trips exactly its
+    intended rule (and the ``*_good.py`` twin is clean) — the rules
+    stay sharp in both directions;
+  * ``src/repro`` itself lints clean modulo the committed
+    ``lint_baseline.json``, and every waiver everywhere carries a
+    non-empty reason.
+"""
+import ast
+import json
+import pathlib
+import subprocess
+import sys
+
+from repro.analysis.loader import SourceModule
+from repro.analysis.runner import lint_sources, run_lint
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+FIXTURES = ROOT / "tests" / "fixtures" / "lint"
+SRC_TREE = ROOT / "src" / "repro"
+BASELINE = ROOT / "lint_baseline.json"
+
+
+def lint_fixture(name):
+    path = FIXTURES / name
+    text = path.read_text()
+    src = SourceModule(path=path, rel=name, name=path.stem,
+                      tree=ast.parse(text, filename=str(path)),
+                      lines=text.splitlines())
+    return lint_sources([src])
+
+
+def rules_of(findings):
+    return sorted({f.rule for f in findings})
+
+
+# ---- bad fixtures trip exactly their rule -----------------------------------
+
+def test_race_bad_trips_only_race_check():
+    fs = lint_fixture("race_bad.py")
+    assert fs, "race_bad.py produced no findings"
+    assert rules_of(fs) == ["race-check"]
+    assert any("Worker._loop:self.count" == f.ident for f in fs)
+
+
+def test_lockorder_bad_trips_only_lock_order_check():
+    fs = lint_fixture("lockorder_bad.py")
+    assert fs, "lockorder_bad.py produced no findings"
+    assert rules_of(fs) == ["lock-order-check"]
+    (f,) = fs                       # one cycle, reported once
+    assert "Pair._lock_a" in f.ident and "Pair._lock_b" in f.ident
+
+
+def test_taxstage_bad_trips_only_tax_stage_check():
+    fs = lint_fixture("taxstage_bad.py")
+    assert fs, "taxstage_bad.py produced no findings"
+    assert rules_of(fs) == ["tax-stage-check"]
+    assert fs[0].ident == "record:bogus_stage"
+
+
+def test_jit_bad_trips_only_jit_purity_check():
+    fs = lint_fixture("jit_bad.py")
+    assert fs, "jit_bad.py produced no findings"
+    assert rules_of(fs) == ["jit-purity-check"]
+    idents = {f.ident for f in fs}
+    # the direct effect and the one two call-hops down
+    assert "step:time.sleep" in idents
+    assert "deeper:open" in idents
+
+
+# ---- good twins are clean ---------------------------------------------------
+
+def test_good_fixtures_are_clean():
+    for name in ("race_good.py", "lockorder_good.py",
+                 "taxstage_good.py", "jit_good.py"):
+        fs = lint_fixture(name)
+        assert fs == [], f"{name}: {[f.format() for f in fs]}"
+
+
+# ---- waiver mechanics -------------------------------------------------------
+
+def test_wellformed_inline_waiver_suppresses():
+    assert lint_fixture("waiver_ok.py") == []
+
+
+def test_reasonless_waiver_waives_nothing_and_is_flagged():
+    fs = lint_fixture("waiver_reasonless.py")
+    assert rules_of(fs) == ["race-check", "waiver-format"]
+
+
+# ---- the tree itself --------------------------------------------------------
+
+def test_src_repro_lints_clean_modulo_baseline():
+    findings = run_lint(SRC_TREE, package="repro",
+                        baseline_path=BASELINE)
+    assert findings == [], "\n".join(f.format() for f in findings)
+
+
+def test_baseline_entries_all_carry_reasons():
+    entries = json.loads(BASELINE.read_text()).get("waivers", [])
+    assert entries, "baseline exists but is empty — drop the file then"
+    for e in entries:
+        assert str(e.get("reason", "")).strip(), f"reasonless: {e}"
+
+
+def test_inline_waivers_in_tree_all_carry_reasons():
+    from repro.analysis.waivers import _waiver_on
+    bad = []
+    for py in SRC_TREE.rglob("*.py"):
+        for i, line in enumerate(py.read_text().splitlines(), 1):
+            parsed = _waiver_on(line)
+            if parsed is not None and not parsed[1]:
+                bad.append(f"{py}:{i}")
+    assert bad == [], f"reasonless inline waivers: {bad}"
+
+
+# ---- CLI contract -----------------------------------------------------------
+
+def test_cli_explain_and_exit_codes():
+    env_cmd = [sys.executable, str(ROOT / "scripts" / "lint.py")]
+    ok = subprocess.run(env_cmd + ["--explain", "race-check"],
+                        capture_output=True, text=True)
+    assert ok.returncode == 0
+    assert "thread-reachable" in ok.stdout
+    bad = subprocess.run(env_cmd + ["--explain", "no-such-rule"],
+                         capture_output=True, text=True)
+    assert bad.returncode == 2
+
+
+def test_cli_clean_tree_exits_zero_with_json():
+    res = subprocess.run(
+        [sys.executable, str(ROOT / "scripts" / "lint.py"), "--json"],
+        capture_output=True, text=True)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert json.loads(res.stdout) == []
