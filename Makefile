@@ -12,6 +12,11 @@
 #   make faults-smoke - CI-sized fault-injection battery: kill-revive /
 #                      drive-drop recovery, degraded-knee cross-check,
 #                      autoscaler rescue (RuntimeError on gate failure)
+#   make reliability-smoke - CI-sized reliability-tax battery: naive
+#                      retry storm must collapse, breaker+backoff must
+#                      recover goodput, degradation must buy p99 at a
+#                      booked accuracy cost, live-vs-DES agreement
+#                      within DES_TOL (RuntimeError on gate failure)
 #   make bench-diff  - compare working-tree BENCH_*.json against HEAD's
 #                      committed baseline (direction-aware tolerances;
 #                      exits 1 on a gated regression)
@@ -37,18 +42,19 @@
 #                      what the sweep produces (CI runs this)
 #   make lint        - AST static analysis over src/repro (race-check,
 #                      lock-order-check, tax-stage-check,
-#                      jit-purity-check) against lint_baseline.json;
-#                      exit 0 clean / 1 findings / 2 internal error
-#                      (see docs/static_analysis.md)
+#                      jit-purity-check, sleep-under-lock) against
+#                      lint_baseline.json; exit 0 clean / 1 findings /
+#                      2 internal error (see docs/static_analysis.md)
 .PHONY: test coverage bench-smoke cluster-smoke faults-smoke \
-	preprocess-smoke bench-diff calibrate docs-lint docs-check \
-	des-golden autotune autotune-check lint check
+	reliability-smoke preprocess-smoke bench-diff calibrate docs-lint \
+	docs-check des-golden autotune autotune-check lint check
 
 PY := PYTHONPATH=src python
 
-# coverage floor: conservative baseline under the current measured
-# coverage — ratchet upward, never down
-COV_MIN := 60
+# coverage floor: measured statement coverage is ~88% (full suite,
+# stdlib settrace approximation); the floor sits under it with margin
+# for tooling differences — ratchet upward, never down
+COV_MIN := 80
 
 test:
 	$(PY) -m pytest -q
@@ -72,6 +78,9 @@ cluster-smoke:
 
 faults-smoke:
 	$(PY) -m benchmarks.fig_fault_recovery --smoke
+
+reliability-smoke:
+	$(PY) -m benchmarks.fig_reliability --smoke
 
 bench-diff:
 	$(PY) scripts/bench_diff.py
@@ -99,5 +108,5 @@ autotune-check:
 lint:
 	$(PY) scripts/lint.py
 
-check: test bench-smoke faults-smoke preprocess-smoke docs-check \
-	autotune-check lint
+check: test bench-smoke faults-smoke reliability-smoke preprocess-smoke \
+	docs-check autotune-check lint

@@ -1,0 +1,275 @@
+"""Reliability tax: retry storms, circuit breaking, graceful degradation.
+
+The headline experiment is a kill-revive retry storm (metastability):
+10 of 17 consumers die mid-run while every client retries on an
+attempt timeout. Naive retries re-publish the entire outage backlog —
+offered load doubles exactly when capacity halves — and goodput never
+recovers after the revive: the classic metastable collapse. The same
+timeline with per-partition circuit breakers + jittered exponential
+backoff sheds the storm at the door and goodput returns to its
+pre-fault level within the recovery window. Four sections:
+
+  * ``storm/naive``   — DES, retries WITHOUT a breaker: the benchmark
+    *requires* the collapse (post-revive goodput still near zero, high
+    retry amplification, diverged) — if naive retries don't melt the
+    cluster the storm scenario itself is broken (RuntimeError);
+  * ``storm/breaker`` — same timeline + breakers: goodput must recover
+    to >= 90% of the pre-fault level within the recovery window after
+    the revive, at lower amplification (RuntimeError gate);
+  * ``degrade/des``   — same outage, no retries, graceful degradation
+    instead: the quality ladder must beat the full-fidelity baseline's
+    p99 while booking a measured accuracy cost < 1;
+  * ``crossval/live`` — one retry+breaker spec through BOTH engines
+    (``reliability_agreement``): live and DES goodput and retry
+    amplification must agree within ``DES_TOL`` (RuntimeError gate);
+  * ``hedge/des``     — informational: hedged tail on a healthy
+    cluster, with the duplicate work (cancels vs wasted serves) on the
+    books and the five-way fractions still summing to 1.
+
+Gateable scalars land in ``BENCH_cluster.json`` (section
+``reliability``) for ``scripts/bench_diff.py``. ``--smoke`` shrinks
+horizons for CI; same code paths throughout.
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import BenchRecorder, row, timed
+from repro.cluster.cluster import ClusterSpec
+from repro.cluster.crossval import DES_TOL, reliability_agreement
+from repro.cluster.faults import FaultPlan
+from repro.cluster.reliability import (BreakerConfig, DegradePolicy,
+                                       RetryPolicy)
+from repro.core import facerec
+from repro.core.broker import BrokerConfig
+from repro.core.metrics import goodput_timeline, percentile
+from repro.core.simulator import ClusterSim, FaceRecWorkload
+
+RECOVERY_WINDOW_S = 6.0       # revive -> goodput back over 90% of pre-fault
+RECOVERY_FRACTION = 0.9
+
+
+def _storm_sim(smoke: bool, *, breaker: BreakerConfig | None) -> ClusterSim:
+    """The kill-revive storm scenario (validated collapse/rescue pair).
+
+    scale=0.01 puts 17 consumers behind 17 partitions at S=4 —
+    utilization ~0.66, comfortably stable — then kills 10 of them for
+    6 (4 smoke) model seconds. During the outage every queued request
+    times out and re-publishes: offered load amplifies exactly while
+    capacity is down, the metastability mechanism.
+    """
+    t_kill, t_rev, sim_time = (6.0, 10.0, 20.0) if smoke \
+        else (10.0, 16.0, 30.0)
+    return ClusterSim(
+        FaceRecWorkload(), BrokerConfig(), speedup=4.0, scale=0.01,
+        sim_time=sim_time, warmup=4.0, seed=0,
+        fault_plan=FaultPlan.kill_revive(t_kill, t_rev, n=10),
+        retry=RetryPolicy(deadline_s=2.0, attempt_timeout_s=0.6,
+                          max_attempts=4, backoff_base_s=0.02,
+                          backoff_cap_s=0.2, seed=1),
+        breaker=breaker)
+
+
+def _storm_times(smoke: bool) -> tuple[float, float, float]:
+    return (6.0, 10.0, 20.0) if smoke else (10.0, 16.0, 30.0)
+
+
+def _pre_fault_goodput(sim: ClusterSim, deadline: float,
+                       t_kill: float) -> float:
+    tl = goodput_timeline(sim.completions, deadline, window_s=1.0)
+    pre = [g for t, g in tl if sim.warmup <= t <= t_kill]
+    return sum(pre) / max(len(pre), 1)
+
+
+def _recovery_s(sim: ClusterSim, deadline: float, t_rev: float,
+                target: float) -> float:
+    """Revive -> first 1s window with goodput back over ``target``."""
+    tl = goodput_timeline(sim.completions, deadline, window_s=1.0)
+    for t, g in tl:
+        if t >= t_rev + 1.0 and g >= target:
+            return t - t_rev
+    return float("inf")
+
+
+def _storm_rows(smoke: bool, rec: BenchRecorder) -> list[str]:
+    t_kill, t_rev, _ = _storm_times(smoke)
+    out = []
+
+    # naive: retries with no breaker -> metastable collapse REQUIRED
+    naive = _storm_sim(smoke, breaker=None)
+    r, us = timed(naive.run)
+    rel = r.reliability
+    pre = _pre_fault_goodput(naive, 2.0, t_kill)
+    n_rec = _recovery_s(naive, 2.0, t_rev, RECOVERY_FRACTION * pre)
+    tl = goodput_timeline(naive.completions, 2.0, window_s=1.0)
+    tail = [g for t, g in tl if t >= t_rev + 1.0]
+    post = sum(tail) / max(len(tail), 1)
+    if post > 0.5 * pre or rel["amplification"] < 1.5:
+        raise RuntimeError(
+            f"naive retry storm failed to collapse: post-revive goodput "
+            f"{post:.0f}/s vs pre-fault {pre:.0f}/s, amplification "
+            f"{rel['amplification']:.2f} — the metastability scenario "
+            "is broken")
+    out.append(row(
+        "storm/naive", us,
+        f"pre={pre:.0f}/s;post_revive={post:.0f}/s;"
+        f"amp={rel['amplification']:.2f};sheds={rel['breaker_sheds']};"
+        f"recovery_s={n_rec:.1f};diverged={r.diverged}"))
+    rec.record("storm_naive.amplification", rel["amplification"],
+               better=None)
+    rec.record("storm_naive.post_revive_goodput", post, better=None)
+
+    # breaker + jittered backoff: goodput must come back
+    fixed = _storm_sim(smoke, breaker=BreakerConfig(
+        window_s=1.0, failure_threshold=0.5, min_volume=5, open_s=1.0,
+        probe_rate=0.1, close_after=3, seed=2))
+    rb, us = timed(fixed.run)
+    relb = rb.reliability
+    pre_b = _pre_fault_goodput(fixed, 2.0, t_kill)
+    rec_s = _recovery_s(fixed, 2.0, t_rev, RECOVERY_FRACTION * pre_b)
+    if rec_s > RECOVERY_WINDOW_S:
+        raise RuntimeError(
+            f"breaker run failed to recover: goodput not back to "
+            f"{RECOVERY_FRACTION:.0%} of pre-fault ({pre_b:.0f}/s) within "
+            f"{RECOVERY_WINDOW_S}s of the revive (took {rec_s}s)")
+    if relb["amplification"] >= rel["amplification"]:
+        raise RuntimeError(
+            f"breaker amplification {relb['amplification']:.2f} not below "
+            f"naive {rel['amplification']:.2f}: shedding isn't damping "
+            "the storm")
+    trips = sum(1 for _, _, s in relb["breaker_timeline"] if s == "open")
+    out.append(row(
+        "storm/breaker", us,
+        f"pre={pre_b:.0f}/s;recovery_s={rec_s:.1f};"
+        f"amp={relb['amplification']:.2f};sheds={relb['breaker_sheds']};"
+        f"trips={trips};goodput={relb['goodput']:.0f}/s;"
+        f"diverged={rb.diverged}"))
+    rec.record("storm_breaker.recovery_s", rec_s, better="lower", tol=0.5)
+    rec.record("storm_breaker.goodput", relb["goodput"], better="higher",
+               tol=0.15)
+    rec.record("storm_breaker.amplification", relb["amplification"],
+               better="lower", tol=0.25)
+    rec.record("storm_breaker.deadline_miss_rate",
+               relb["deadline_miss_rate"], better="lower", tol=0.35)
+    return out
+
+
+def _degrade_rows(smoke: bool, rec: BenchRecorder) -> list[str]:
+    t_kill, t_rev, sim_time = _storm_times(smoke)
+
+    def sim(degrade):
+        return ClusterSim(
+            FaceRecWorkload(), BrokerConfig(), speedup=4.0, scale=0.01,
+            sim_time=sim_time, warmup=4.0, seed=0,
+            fault_plan=FaultPlan.kill_revive(t_kill, t_rev, n=10),
+            degrade=degrade)
+
+    base = sim(None)
+    rb, _ = timed(base.run)
+    p99_base = percentile([lat for _, lat in base.completions], 0.99)
+
+    deg = sim(DegradePolicy())
+    rd, us = timed(deg.run)
+    rel = rd.reliability
+    p99_deg = percentile([lat for _, lat in deg.completions], 0.99)
+    if p99_deg > p99_base or rel["accuracy_proxy_mean"] >= 1.0:
+        raise RuntimeError(
+            f"degradation bought nothing: p99 {p99_deg:.2f}s vs baseline "
+            f"{p99_base:.2f}s at accuracy {rel['accuracy_proxy_mean']:.3f}"
+            " — the quality ladder isn't shedding work")
+    out = [row(
+        "degrade/des", us,
+        f"p99_base={p99_base:.2f}s;p99_degraded={p99_deg:.2f}s;"
+        f"accuracy={rel['accuracy_proxy_mean']:.3f};"
+        f"transitions={len(rel['degrade_timeline'])};"
+        f"diverged={rd.diverged}")]
+    rec.record("degrade.p99_s", p99_deg, better="lower", tol=0.35)
+    rec.record("degrade.p99_baseline_s", p99_base, better=None)
+    rec.record("degrade.accuracy_proxy", rel["accuracy_proxy_mean"],
+               better="higher", tol=0.10)
+    return out
+
+
+def _crossval_rows(smoke: bool, rec: BenchRecorder) -> list[str]:
+    # same horizon in smoke and full: the live half is wall-clock bound
+    # (12 model seconds / compression 6 = ~2s) and a shorter window
+    # puts the kill too close to warmup for the amplification estimate
+    # to settle in either engine
+    spec = ClusterSpec(
+        speedup=4.0, n_replicas=8, time_compression=6.0, seed=0,
+        sim_time=12.0, warmup=2.0,
+        fault_plan=FaultPlan.kill_revive(4.0, 7.0, n=4),
+        retry=RetryPolicy(deadline_s=2.0, attempt_timeout_s=0.6,
+                          max_attempts=4, backoff_base_s=0.02,
+                          backoff_cap_s=0.2, seed=1),
+        breaker=BreakerConfig(window_s=1.0, failure_threshold=0.5,
+                              min_volume=5, open_s=1.0, probe_rate=0.1,
+                              close_after=3, seed=2))
+    agr, us = timed(reliability_agreement, spec)
+    if not agr.agree:
+        raise RuntimeError(
+            f"live/DES reliability disagreement beyond {DES_TOL:.0%}: "
+            + agr.row())
+    rec.record("crossval.goodput_err", agr.goodput_err, better="lower",
+               tol=1.0, gate=False)       # live: diffable, not CI-gating
+    rec.record("crossval.amplification_err", agr.amplification_err,
+               better="lower", tol=1.0, gate=False)
+    return [row("crossval/live", us, agr.row() + f";tol={DES_TOL}")]
+
+
+def _hedge_rows(smoke: bool, rec: BenchRecorder) -> list[str]:
+    sim_time = 10.0 if smoke else 20.0
+
+    def sim(hedge_delay):
+        return ClusterSim(
+            FaceRecWorkload(), BrokerConfig(), speedup=4.0, scale=0.01,
+            sim_time=sim_time, warmup=2.0, seed=0,
+            retry=RetryPolicy(deadline_s=2.0, attempt_timeout_s=1.0,
+                              max_attempts=2, hedge_delay_s=hedge_delay,
+                              seed=3))
+
+    base = sim(None)
+    base.run()
+    p99_base = percentile([lat for _, lat in base.completions], 0.99)
+
+    # 0.2s sits just past the healthy p50: stragglers (requests stuck
+    # behind the fetch-min batching floor) get a twin, the rest don't —
+    # hedging earlier than the median just doubles the offered load
+    hedged = sim(0.2)
+    r, us = timed(hedged.run)
+    rel = r.reliability
+    p99_h = percentile([lat for _, lat in hedged.completions], 0.99)
+    fw = hedged.log.five_way(facerec.stage_category)
+    if abs(sum(fw.values()) - 1.0) > 1e-6:
+        raise RuntimeError(f"five-way fractions sum to {sum(fw.values())} "
+                           "with hedging active — duplicate spans are "
+                           "being double-counted")
+    out = [row(
+        "hedge/des", us,
+        f"p99_base={p99_base:.2f}s;p99_hedged={p99_h:.2f}s;"
+        f"hedges={rel['hedges']};cancels={rel['hedge_cancels']};"
+        f"wastes={rel['hedge_wastes']};amp={rel['amplification']:.2f};"
+        f"queue_frac={fw['queue']:.3f};goodput={rel['goodput']:.0f}/s")]
+    rec.record("hedge.p99_s", p99_h, better="lower", tol=0.35)
+    rec.record("hedge.amplification", rel["amplification"], better="lower",
+               tol=0.25)
+    rec.record("hedge.waste_fraction",
+               rel["hedge_wastes"] / max(rel["hedges"], 1), better="lower",
+               tol=0.5)
+    return out
+
+
+def run(smoke: bool = False) -> list[str]:
+    rec = BenchRecorder("reliability", mode="smoke" if smoke else "full")
+    out = (_storm_rows(smoke, rec) + _degrade_rows(smoke, rec)
+           + _crossval_rows(smoke, rec) + _hedge_rows(smoke, rec))
+    rec.flush()
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized runs (shorter horizons)")
+    args = ap.parse_args()
+    print("\n".join(run(smoke=args.smoke)))

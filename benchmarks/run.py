@@ -24,6 +24,7 @@ MODULES = [
     "benchmarks.fig_fault_recovery",
     "benchmarks.fig_fused_path",
     "benchmarks.fig_preprocess_offload",
+    "benchmarks.fig_reliability",
     "benchmarks.fig_roofline_sweep",
     "benchmarks.tab34_tco",
     "benchmarks.roofline_table",

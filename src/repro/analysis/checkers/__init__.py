@@ -5,7 +5,7 @@ The runner executes every registered rule; ``scripts/lint.py
 --explain RULE`` prints the explanation text verbatim.
 """
 from repro.analysis.checkers import (jitpurity, lockorder, race,
-                                     taxstage)
+                                     sleepunderlock, taxstage)
 
 # rule -> (checker callable, --explain text)
 RULES = {
@@ -13,6 +13,7 @@ RULES = {
     "lock-order-check": (lockorder.check, lockorder.EXPLAIN),
     "tax-stage-check": (taxstage.check, taxstage.EXPLAIN),
     "jit-purity-check": (jitpurity.check, jitpurity.EXPLAIN),
+    "sleep-under-lock": (sleepunderlock.check, sleepunderlock.EXPLAIN),
 }
 
 # meta-rules emitted by the waiver machinery, documented for --explain

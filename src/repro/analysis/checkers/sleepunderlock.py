@@ -1,0 +1,77 @@
+"""sleep-under-lock: blocking waits while holding a lock.
+
+A thread that sleeps or waits while holding a lock stalls every other
+thread that needs that lock for the full wait — the classic convoy
+that turns a 2ms pacing sleep into a cluster-wide head-of-line block.
+In every thread-reachable function this checker flags calls to
+
+  * ``time.sleep``;
+  * ``threading.Event.wait`` / ``threading.Barrier.wait`` /
+    ``threading.Thread.join``;
+  * ``threading.Condition.wait`` / ``wait_for`` — but ONLY when a
+    lock OTHER than the condition's own is also held: waiting on a
+    condition with its own lock held is the sanctioned pattern (wait
+    atomically releases that lock), while waiting with a second lock
+    held blocks that second lock for the whole wait.
+
+"Lock held" counts both the lexical ``with`` context at the call and
+the interprocedural lock-context fixpoint — a helper only ever called
+by lock holders is treated as running under the lock even with no
+``with`` of its own. Fix by moving the wait outside the critical
+section, switching to a Condition owned by the same lock, or waiving
+with a reason.
+"""
+from __future__ import annotations
+
+from repro.analysis.findings import Finding
+from repro.analysis.threads import _lock_token, resolve_chain
+
+EXPLAIN = __doc__
+
+# dotted external targets that block the calling thread outright
+_BLOCKING = {
+    "time.sleep",
+    "threading.Event.wait",
+    "threading.Barrier.wait",
+    "threading.Thread.join",
+}
+# condition waits: blocking too, but exempt on the condition's own lock
+_CONDITION_WAITS = {
+    "threading.Condition.wait",
+    "threading.Condition.wait_for",
+}
+
+
+def check(program, graph, sources) -> list[Finding]:
+    out: list[Finding] = []
+    for qual in sorted(graph.thread_reachable):
+        fn = program.functions.get(qual)
+        if fn is None:
+            continue
+        short = qual[len(fn.module) + 1:] if fn.module else qual
+        for site in fn.calls:
+            res = resolve_chain(program, fn, site.chain)
+            if res is None or res[0] != "external":
+                continue
+            dotted = res[1]
+            if dotted not in _BLOCKING and dotted not in _CONDITION_WAITS:
+                continue
+            held = graph.held_at(fn, site.held)
+            if dotted in _CONDITION_WAITS:
+                # subtract the condition's own lock: cv.wait() under
+                # `with cv:` releases exactly that lock while waiting
+                own = _lock_token(program, fn, site.chain[:-1])
+                held = held - {own} if own else held
+            if not held:
+                continue
+            locks = ", ".join(sorted(held))
+            out.append(Finding(
+                rule="sleep-under-lock", path=fn.rel, line=site.lineno,
+                ident=f"{short}:{dotted}",
+                message=(f"'{dotted}' called in thread-reachable "
+                         f"'{short}' while holding {locks} — every "
+                         "other holder stalls for the full wait; move "
+                         "the wait outside the lock or waive with a "
+                         "reason"),
+                detail={"held": sorted(held)}))
+    return out

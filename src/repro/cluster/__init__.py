@@ -19,25 +19,36 @@ Modules:
     live cluster and the DES;
   * ``autoscaler`` — queue-depth/SLO-driven elastic replica count
     (hysteresis + cooldown) through the same join/leave path;
+  * ``reliability`` — deadline-aware request lifecycle: retry/hedge
+    policies, per-target circuit breakers, graceful-degradation ladder
+    (shared with the DES, duck-typed through the spec);
   * ``crossval``  — measured-vs-modeled knee comparison (live / DES /
     closed-form), the loop ``benchmarks/fig_cluster_scaling.py`` plots.
 """
 from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig, ScaleAction
 from repro.cluster.cluster import ClusterResult, ClusterSpec, ServingCluster
-from repro.cluster.crossval import KneeComparison, knee_comparison
+from repro.cluster.crossval import (KneeComparison, ReliabilityAgreement,
+                                    knee_comparison, reliability_agreement)
 from repro.cluster.faults import FaultEngine, FaultEvent, FaultPlan
 from repro.cluster.loadgen import ClosedLoopLoadGen, OpenLoopLoadGen
-from repro.cluster.metrics import (LatencyStats, RecoveryReport, SLOReport,
-                                   TailSLO, recovery_report)
+from repro.cluster.metrics import (LatencyStats, RecoveryReport,
+                                   ReliabilityReport, SLOReport, TailSLO,
+                                   recovery_report, reliability_report)
+from repro.cluster.reliability import (BreakerConfig, CircuitBreaker,
+                                       DegradeLevel, DegradePolicy,
+                                       RetryPolicy)
 from repro.cluster.scheduler import ConsumerGroup
 
 __all__ = [
     "ClusterResult", "ClusterSpec", "ServingCluster",
     "KneeComparison", "knee_comparison",
+    "ReliabilityAgreement", "reliability_agreement",
     "FaultEngine", "FaultEvent", "FaultPlan",
     "Autoscaler", "AutoscalerConfig", "ScaleAction",
+    "BreakerConfig", "CircuitBreaker", "DegradeLevel", "DegradePolicy",
+    "RetryPolicy",
     "ClosedLoopLoadGen", "OpenLoopLoadGen",
-    "LatencyStats", "RecoveryReport", "SLOReport", "TailSLO",
-    "recovery_report",
+    "LatencyStats", "RecoveryReport", "ReliabilityReport", "SLOReport",
+    "TailSLO", "recovery_report", "reliability_report",
     "ConsumerGroup",
 ]

@@ -35,6 +35,8 @@ tax exactly like the single-replica pipeline.
 """
 from __future__ import annotations
 
+import heapq
+import itertools
 import threading
 import time
 from dataclasses import dataclass, field, replace
@@ -86,6 +88,12 @@ class ClusterSpec:
     #                                      BOTH engines (live + DES)
     autoscale: object = None             # AutoscalerConfig; elastic
     #                                      replica count in both engines
+    retry: object = None                 # RetryPolicy; deadline + retry +
+    #                                      hedge lifecycle in both engines
+    breaker: object = None               # BreakerConfig; per-partition
+    #                                      circuit breakers in both engines
+    degrade: object = None               # DegradePolicy; graceful quality
+    #                                      ladder in both engines
 
     @property
     def eff(self) -> float:
@@ -128,9 +136,11 @@ class ClusterSpec:
         (pinned by the golden fixtures) byte-identical."""
         kw: dict = {}
         if (self.fault_plan is not None or self.autoscale is not None
-                or self.n_partitions is not None):
+                or self.n_partitions is not None or self.retry is not None
+                or self.breaker is not None or self.degrade is not None):
             kw = dict(fault_plan=self.fault_plan, autoscale=self.autoscale,
-                      n_partitions=self.partitions)
+                      n_partitions=self.partitions, retry=self.retry,
+                      breaker=self.breaker, degrade=self.degrade)
         return ClusterSim(self.scaled_workload(), self.scaled_broker(),
                           speedup=self.speedup if speedup is None else speedup,
                           scale=1.0, sim_time=sim_time, warmup=warmup,
@@ -161,6 +171,8 @@ class ClusterResult:
     scale_actions: list = field(default_factory=list)  # ScaleAction records
     samples: list = field(default_factory=list)       # (t_complete, latency)
     inflight_samples: list = field(default_factory=list)  # (t, in-flight)
+    reliability: dict | None = None    # ReliabilityReport.to_dict(), when
+    #                                    a retry/breaker/degrade policy ran
 
     @property
     def drop_fraction(self) -> float:
@@ -191,7 +203,11 @@ class _ReplicaState:
         self.name = name
         self.latencies: list[tuple[float, float]] = []  # (t_submit, latency)
         self.busy_model = 0.0
-        self.served = 0
+        self.served = 0       # unique wins (client-visible completions)
+        self.consumed = 0     # everything drained, incl. cancelled/wasted
+        #                       duplicates — the backlog-accounting count
+        self.acc_sum = 0.0    # accuracy proxy over wins (degradation cost)
+        self.acc_n = 0
         self.stats = BatchStats()
 
 
@@ -216,6 +232,30 @@ class ServingCluster:
         self._inflight_samples: list[tuple[float, int]] = []
         self.fault_engine = None
         self.autoscaler = None
+        # ---- reliability lifecycle (retry / hedge / breaker / degrade) ----
+        # the retry+breaker path reroutes _produce_one through
+        # _produce_rel; degrade alone only scales service in _serve
+        self._rel_routed = (spec.retry is not None
+                            or spec.breaker is not None)
+        self._breakers: dict[int, object] = {}   # pi -> CircuitBreaker
+        self._rel_state: dict[int, dict] = {}    # rid -> attempt ledger
+        self._rel_completed: dict[int, float] = {}  # rid -> t_win (dedupe)
+        self._rel_offered = 0
+        self._rel_attempts = 0
+        self._rel_retries = 0
+        self._rel_hedges = 0
+        self._rel_hedge_cancels = 0
+        self._rel_hedge_wastes = 0
+        self._rel_deadline_misses = 0
+        self._rel_sheds = 0
+        # model-time timer wheel for rcheck/republish/hedge/dlcheck —
+        # one daemon thread sleeps on this condition (its OWN lock, the
+        # sanctioned wait-under-lock pattern) until the next due event
+        self._rel_cv = threading.Condition()
+        self._rel_heap: list = []                # (t_model, seq, kind, pl)
+        self._rel_seq = itertools.count()
+        self._deg_depth = 0
+        self.degrade_timeline: list[tuple[float, int, str]] = []
 
     # ---- time -------------------------------------------------------------
 
@@ -253,6 +293,16 @@ class ServingCluster:
         self.topic = LiveTopic("faces", sp.partitions, sp.scaled_broker(),
                                sp.time_compression, self.wall_deadline)
         self.topic.start()
+        if sp.breaker is not None:
+            self._breakers = {pi: sp.breaker.make(pi)
+                              for pi in range(sp.partitions)}
+        if sp.retry is not None:
+            # timeout/backoff/hedge/deadline events fire in model time;
+            # without a retry policy nothing schedules, so no thread
+            rt = threading.Thread(target=self._reliability_loop,
+                                  daemon=True)
+            self._feeder_threads.append(rt)
+            rt.start()
         for _ in range(sp.n_replicas):
             self.add_replica()
         if sp.loop == "closed":
@@ -301,12 +351,30 @@ class ServingCluster:
         (t_model, produced - completed) every ~50 ms wall; divergence
         compares the two post-warmup half-window means.
         """
+        sp = self.spec
         while time.perf_counter() < self.wall_deadline:
-            # snapshot: add_replica() may insert mid-iteration
-            done = sum(st.served
-                       for st in list(self._replica_states.values()))
-            self._inflight_samples.append(
-                (self._now_model(), self.produced - done))
+            # snapshot: add_replica() may insert mid-iteration; consumed
+            # (not served) so a drained hedge duplicate leaves the
+            # in-flight population like any other record
+            states = list(self._replica_states.values())
+            done = sum(st.consumed for st in states)
+            t = self._now_model()
+            backlog = self.produced - done
+            self._inflight_samples.append((t, backlog))
+            if sp.degrade is not None:
+                # degradation controller rides the monitor cadence:
+                # per-replica backlog + breaker-open fraction in, ladder
+                # depth out — same decide() as the DES sample event
+                per = backlog / max(len(states), 1)
+                bs = list(self._breakers.values())
+                of = (sum(1 for b in bs if b.state != "closed")
+                      / len(bs)) if bs else 0.0
+                nd = sp.degrade.decide(per, of, self._deg_depth)
+                if nd != self._deg_depth:
+                    with self._lock:
+                        self._deg_depth = nd
+                    self.degrade_timeline.append(
+                        (t, nd, sp.degrade.level(nd).name))
             time.sleep(0.05)
 
     def add_replica(self) -> str:
@@ -360,7 +428,7 @@ class ServingCluster:
                 return
             t = self._now_model()
             states = list(self._replica_states.values())
-            backlog = self.produced - sum(st.served for st in states)
+            backlog = self.produced - sum(st.consumed for st in states)
             recent = [lat for st in states
                       for t_sub, lat in st.latencies[-256:]
                       if t_sub + lat > t - horizon]
@@ -399,6 +467,8 @@ class ServingCluster:
                      crop_rng=None) -> bool:
         """Admit + publish one message; False if dropped/rejected."""
         sp = self.spec
+        if self._rel_routed:
+            return self._produce_rel(rid, scheduled_model, crop_rng)
         part = self.topic.pick_partition()
         bounded = sp.admission in ("drop", "block")
         while True:            # check-and-admit atomically across producers
@@ -435,6 +505,157 @@ class ServingCluster:
             self._lag_sum += max(0.0, now - scheduled_model)
         self.topic.publish(msg, part)
         return True
+
+    # ---- reliability lifecycle (mirrors the DES rel_send/rcheck path) -----
+
+    def _produce_rel(self, rid: int, scheduled_model: float,
+                     crop_rng=None) -> bool:
+        """Register one request and issue its first attempt.
+
+        The reliability path replaces bounded admission with breaker
+        shedding: an attempt whose round-robin partition refuses it is
+        rejected instantly (and retried after backoff, if the policy
+        allows), never blocked — a client with a deadline cannot wait on
+        the producer side.
+        """
+        sp = self.spec
+        now = self._now_model()
+        size = sp.wl.face_bytes
+        crop_yuv = None
+        if sp.service == "real":
+            import numpy as np
+            from repro.preprocess import host as pre_host
+            crop = crop_rng.integers(0, 256, (48, 48, 3), dtype=np.uint8)
+            crop_yuv = pre_host.rgb_to_yuv(crop)
+            size = float(crop.nbytes)
+        with self._lock:
+            # attempt ledger: retries re-publish from this template so a
+            # re-sent message carries the ORIGINAL payload + t_produced
+            # (client-perceived latency spans all attempts)
+            self._rel_state[rid] = {"n": 0, "t0": now, "size": size,
+                                    "crop": crop_yuv}
+            self._rel_offered += 1
+            self._lag_sum += max(0.0, now - scheduled_model)
+        if sp.retry is not None:
+            self._rel_schedule(now + sp.retry.deadline_s, "dlcheck", rid)
+            if sp.retry.hedge_delay_s is not None:
+                self._rel_schedule(now + sp.retry.hedge_delay_s,
+                                   "hedge", rid)
+        return self._rel_attempt(rid, "attempt")
+
+    def _rel_attempt(self, rid: int, origin: str) -> bool:
+        """One publish attempt (first / retry / hedge) for a known rid."""
+        sp, retry = self.spec, self.spec.retry
+        now = self._now_model()
+        with self._lock:
+            st = self._rel_state.get(rid)
+            if st is None:
+                return False
+            st["n"] += 1
+            n = st["n"]
+            self._rel_attempts += 1
+        retryable = retry is not None and origin != "hedge"
+        # one round-robin candidate per attempt: its breaker admits or
+        # the attempt is shed and retried against the NEXT partition
+        # after backoff (scanning for any willing partition would
+        # compound per-partition probe rates into near-certain
+        # admission — same rule as the DES pick_part_allowed)
+        part = self.topic.pick_partition()
+        b = self._breakers.get(part.index)
+        if b is not None and not b.allow(now):
+            with self._lock:
+                self._rel_sheds += 1
+            self.log.log(rid, "reject", now, now, int(st["size"]),
+                         reason="breaker_open")
+            if retryable and retry.retry_allowed(now, st["t0"], n):
+                self._rel_schedule(now + retry.backoff_s(rid, n),
+                                   "republish", rid)
+            return False
+        msg = Message(key=rid, size=st["size"], t_produced=st["t0"])
+        msg.meta["rel_pub"] = now       # late-completion gate in _serve
+        if st["crop"] is not None:
+            msg.meta["crop_yuv"] = st["crop"]
+        with self._lock:
+            part.accepted += 1
+            self.produced += 1
+        self.topic.publish(msg, part)
+        if retry is not None:
+            self._rel_schedule(now + retry.attempt_timeout_s, "rcheck",
+                               (rid, part.index, retryable))
+        return True
+
+    def _rel_schedule(self, t_model: float, kind: str, payload) -> None:
+        with self._rel_cv:
+            heapq.heappush(self._rel_heap,
+                           (t_model, next(self._rel_seq), kind, payload))
+            self._rel_cv.notify()
+
+    def _reliability_loop(self) -> None:
+        """Model-time timer wheel for the request lifecycle.
+
+        Pops rcheck/republish/hedge/dlcheck events as they come due,
+        firing each OUTSIDE the condition (handlers publish and take
+        other locks). Waiting happens on the condition's own lock —
+        the wheel never sleeps holding anyone else's.
+        """
+        sp = self.spec
+        while True:
+            with self._rel_cv:
+                now = self._now_model()
+                while not self._rel_heap or self._rel_heap[0][0] > now:
+                    if time.perf_counter() >= self.wall_deadline:
+                        return
+                    gap_wall = ((self._rel_heap[0][0] - now)
+                                / sp.time_compression
+                                if self._rel_heap else 0.05)
+                    self._rel_cv.wait(timeout=min(max(gap_wall, 0.0005),
+                                                  0.05))
+                    now = self._now_model()
+                t, _, kind, pl = heapq.heappop(self._rel_heap)
+            self._rel_fire(kind, pl)
+
+    def _rel_fire(self, kind: str, pl) -> None:
+        retry = self.spec.retry
+        now = self._now_model()
+        if kind == "rcheck":
+            # attempt timeout: presumed lost -> breaker failure, and
+            # (for the primary chain) a backed-off re-publish
+            rid, pi, retryable = pl
+            with self._lock:
+                done = rid in self._rel_completed
+                st = self._rel_state.get(rid)
+            if done or st is None:
+                return
+            b = self._breakers.get(pi)
+            if b is not None:
+                b.record(now, False)
+            if retryable and retry.retry_allowed(now, st["t0"], st["n"]):
+                self._rel_schedule(now + retry.backoff_s(rid, st["n"]),
+                                   "republish", rid)
+        elif kind in ("republish", "hedge"):
+            rid = pl
+            with self._lock:
+                if rid in self._rel_completed:
+                    return
+                st = self._rel_state.get(rid)
+                if st is None:
+                    return
+                if kind == "republish":
+                    self._rel_retries += 1
+                else:
+                    self._rel_hedges += 1
+            self.log.log(rid, "retry" if kind == "republish" else "hedge",
+                         now, now, int(st["size"]))
+            self._rel_attempt(rid, "retry" if kind == "republish"
+                              else "hedge")
+        elif kind == "dlcheck":
+            rid = pl
+            with self._lock:
+                missed = rid not in self._rel_completed
+                if missed:
+                    self._rel_deadline_misses += 1
+            if missed:
+                self.log.log(rid, "deadline_miss", now, now)
 
     def _producer(self, i: int, schedule: list[float]) -> None:
         sp = self.spec
@@ -560,7 +781,31 @@ class ServingCluster:
 
     def _serve(self, st: _ReplicaState, part, batch: list[Message]) -> None:
         sp = self.spec
+        rel_on = sp.retry is not None
         t_deq = self._now_model()
+        if rel_on:
+            # request-id dedupe at dequeue: a duplicate whose twin
+            # already won is cancelled before costing any service time
+            # (the cheap hedge outcome)
+            fresh = []
+            for msg in batch:
+                with self._lock:
+                    dup = msg.key in self._rel_completed
+                    if dup:
+                        self._rel_hedge_cancels += 1
+                        part.consumed += 1
+                if dup:
+                    self.log.log(msg.key, "hedge_cancel", t_deq, t_deq,
+                                 int(msg.size))
+                    st.consumed += 1  # lint: waive race-check -- per-replica state; only this replica thread writes it, merged after join
+                else:
+                    fresh.append(msg)
+            batch = fresh
+            if not batch:
+                return
+        lvl = (sp.degrade.level(self._deg_depth)
+               if sp.degrade is not None else None)
+        low_res = False
         for msg in batch:
             self.log.log(msg.key, "wait", msg.t_produced, t_deq,
                          payload_bytes=int(msg.size))
@@ -569,12 +814,25 @@ class ServingCluster:
             from repro.core import facerec
             yuv = np.stack([m.meta["crop_yuv"] for m in batch])
             w0 = time.perf_counter()
+            low_res = (lvl is not None and lvl.letterbox_scale < 1.0
+                       and self._preprocess.placement == "host")
             # decode (host or device per spec.placement), then the
             # fused identify; only the jitted device path pads to pow2
             # (aligning with the pre-warmed buckets) — host NumPy has
             # no compile cache, so padding would just be wasted work
             # inside the measured service span
-            if self._preprocess.placement == "device":
+            if low_res:
+                # degraded decode: subsample the wire YUV down to the
+                # letterboxed resolution (a fraction of the codec
+                # work), then nearest-neighbour upsample the decoded
+                # RGB back to the stack's native crop size. Host
+                # placement only — the jitted device decode is
+                # shape-specialized to the pre-warmed buckets, and a
+                # mid-run recompile would masquerade as collapse.
+                step = max(1, round(1.0 / lvl.letterbox_scale))
+                rgb = self._preprocess.decode(yuv[:, :, ::step, ::step])
+                rgb = rgb.repeat(step, axis=1).repeat(step, axis=2)
+            elif self._preprocess.placement == "device":
                 rgb = self._preprocess.decode(
                     facerec._pad_rows_pow2(yuv))[:len(batch)]
             else:
@@ -583,23 +841,63 @@ class ServingCluster:
             dur_model = ((time.perf_counter() - w0)
                          * sp.time_compression)
         else:
-            dur_model = sp.wl.t_identify / sp.speedup * len(batch)
+            # paced mode prices the whole ladder: the degrade level's
+            # service_factor scales the emulated identify span
+            dur_model = (sp.wl.t_identify / sp.speedup * len(batch)
+                         * (lvl.service_factor if lvl is not None else 1.0))
             time.sleep(dur_model / sp.time_compression)
         st.busy_model += dur_model  # lint: waive race-check -- per-replica state; only this replica thread writes it, merged after join
         t_end = self._now_model()
         dt = (t_end - t_deq) / len(batch)
+        # real mode books accuracy cost only for the rung it actually
+        # implements (the letterbox decode); paced mode emulates every
+        # rung, so the ladder's proxy always applies
+        applied = sp.service != "real" or low_res
+        acc = (lvl.accuracy_proxy
+               if (lvl is not None and applied) else 1.0)
         for j, msg in enumerate(batch):
-            self.log.log(msg.key, "identify", t_deq + j * dt,
-                         t_deq + (j + 1) * dt,
-                         payload_bytes=int(msg.size), batch_size=len(batch))
+            t_fin = t_deq + (j + 1) * dt
             # consumed feeds part.in_flight, which _produce_one's
             # admission check reads under _lock — keep the pair of
             # counters consistent for bounded admission
-            with self._lock:
-                part.consumed += 1
+            if rel_on:
+                with self._lock:
+                    win = msg.key not in self._rel_completed
+                    if win:
+                        self._rel_completed[msg.key] = t_fin
+                    else:
+                        self._rel_hedge_wastes += 1
+                    part.consumed += 1
+                if not win:
+                    # both attempts were in service at once: the
+                    # loser's span is wasted work, not a completion
+                    self.log.log(msg.key, "hedge_waste", t_deq + j * dt,
+                                 t_fin, int(msg.size))
+                    st.consumed += 1  # lint: waive race-check -- per-replica state; only this replica thread writes it, merged after join
+                    continue
+            else:
+                with self._lock:
+                    part.consumed += 1
+            b = self._breakers.get(part.index)
+            if b is not None and not (
+                    rel_on and t_fin - msg.meta.get("rel_pub", t_fin)
+                    > sp.retry.attempt_timeout_s + 1e-12):
+                # a late completion is not a success signal: its rcheck
+                # already recorded the timeout as the outcome
+                b.record(t_fin, True)
+            self.log.log(msg.key, "identify", t_deq + j * dt, t_fin,
+                         payload_bytes=int(msg.size), batch_size=len(batch))
+            if acc < 1.0:
+                name = next((l.name for l in sp.degrade.levels
+                             if l.accuracy_proxy == acc), "degraded")
+                self.log.log(msg.key, "degrade", t_fin, t_fin,
+                             int(msg.size), accuracy_proxy=acc, level=name)
             st.served += 1  # lint: waive race-check -- per-replica state; only this replica thread writes it, merged after join
+            st.consumed += 1  # lint: waive race-check -- per-replica state; only this replica thread writes it, merged after join
+            st.acc_sum += acc  # lint: waive race-check -- per-replica state; only this replica thread writes it, merged after join
+            st.acc_n += 1  # lint: waive race-check -- per-replica state; only this replica thread writes it, merged after join
             st.latencies.append(
-                (msg.t_produced, t_deq + (j + 1) * dt - msg.t_produced))
+                (msg.t_produced, t_fin - msg.t_produced))
             evt = self._done_events.get(msg.key)
             if evt is not None:
                 evt.set()
@@ -612,7 +910,9 @@ class ServingCluster:
         span_model = span_wall * sp.time_compression
         states = list(self._replica_states.values())
         completed = sum(st.served for st in states)
-        backlog = self.produced - completed
+        # backlog counts what was published and never drained; a hedge
+        # duplicate that WAS drained (cancelled or wasted) is not backlog
+        backlog = self.produced - sum(st.consumed for st in states)
         samples = [lat for st in states for t_sub, lat in st.latencies
                    if t_sub >= sp.warmup]
         steady_span = max(span_model - sp.warmup, 1e-9)
@@ -652,7 +952,39 @@ class ServingCluster:
             scale_actions=(list(self.autoscaler.actions)
                            if self.autoscaler else []),
             samples=completions,
-            inflight_samples=list(self._inflight_samples))
+            inflight_samples=list(self._inflight_samples),
+            reliability=self._reliability_dict(span_model, completions,
+                                               states))
         if self.slo is not None:
             result.slo = self.slo.check(stats, result.drop_fraction)
         return result
+
+    def _reliability_dict(self, span_model: float, completions: list,
+                          states: list) -> dict | None:
+        sp = self.spec
+        if (sp.retry is None and sp.breaker is None
+                and sp.degrade is None):
+            return None
+        from repro.cluster.metrics import reliability_report
+        timeline = sorted((t, pi, s)
+                          for pi, b in sorted(self._breakers.items())
+                          for t, s in b.timeline)
+        # without the rerouted producer path every publish is its own
+        # sole attempt (degrade-only runs)
+        offered = self._rel_offered if self._rel_routed else self.produced
+        attempts = self._rel_attempts if self._rel_routed else self.produced
+        deadline = (sp.retry.deadline_s if sp.retry is not None
+                    else float("inf"))
+        acc_n = sum(st.acc_n for st in states)
+        acc_sum = sum(st.acc_sum for st in states)
+        return reliability_report(
+            completions, deadline, max(span_model, 1e-9),
+            offered=offered, attempts=attempts,
+            deadline_misses=self._rel_deadline_misses,
+            retries=self._rel_retries, hedges=self._rel_hedges,
+            hedge_cancels=self._rel_hedge_cancels,
+            hedge_wastes=self._rel_hedge_wastes,
+            breaker_sheds=self._rel_sheds,
+            accuracy_proxy_mean=(acc_sum / acc_n if acc_n else 1.0),
+            breaker_timeline=timeline,
+            degrade_timeline=self.degrade_timeline).to_dict()

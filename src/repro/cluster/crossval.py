@@ -153,6 +153,70 @@ class FaultKnees:
                 f"des={self.des_degraded:.1f};agree={self.agree}")
 
 
+@dataclass
+class ReliabilityAgreement:
+    """Live-vs-DES agreement on the reliability-tax quantities.
+
+    One spec — same fault plan, same retry/breaker/degrade policies —
+    runs through both execution engines; agreement is gated on the two
+    quantities the reliability layer exists to control: goodput
+    (client-visible value rate) and retry amplification (cluster-
+    carried load per offered request). Both are gated at ``DES_TOL``
+    relative error — unlike the knee comparison there is no analytic
+    third referee here, so the DES tolerance IS the contract between
+    the engines.
+    """
+    des_goodput: float
+    live_goodput: float
+    des_amplification: float
+    live_amplification: float
+
+    @staticmethod
+    def _err(live: float, des: float) -> float:
+        return abs(live - des) / max(abs(des), 1e-9)
+
+    @property
+    def goodput_err(self) -> float:
+        return self._err(self.live_goodput, self.des_goodput)
+
+    @property
+    def amplification_err(self) -> float:
+        return self._err(self.live_amplification, self.des_amplification)
+
+    @property
+    def agree(self) -> bool:
+        return (self.goodput_err <= DES_TOL
+                and self.amplification_err <= DES_TOL)
+
+    def row(self) -> str:
+        return (f"goodput:des={self.des_goodput:.1f};"
+                f"live={self.live_goodput:.1f};"
+                f"err={self.goodput_err:.2f}|"
+                f"amp:des={self.des_amplification:.2f};"
+                f"live={self.live_amplification:.2f};"
+                f"err={self.amplification_err:.2f}|agree={self.agree}")
+
+
+def reliability_agreement(spec) -> ReliabilityAgreement:
+    """Run one reliability spec through both engines and compare.
+
+    ``spec`` must carry a retry policy (else neither engine produces a
+    reliability report); the fault plan and breaker/degrade policies
+    ride along identically. The DES run uses the spec's own
+    sim_time/warmup so both engines observe the same horizon.
+    """
+    from repro.cluster.cluster import ServingCluster
+    if spec.retry is None:
+        raise ValueError("reliability_agreement needs spec.retry set")
+    live = ServingCluster(spec).run().reliability
+    des = spec.des_sim(sim_time=spec.sim_time,
+                       warmup=spec.warmup).run().reliability
+    return ReliabilityAgreement(
+        des_goodput=des["goodput"], live_goodput=live["goodput"],
+        des_amplification=des["amplification"],
+        live_amplification=live["amplification"])
+
+
 def fault_knees(spec, fault_plan, degraded_spec,
                 iters: int = 5, sim_time: float = 20.0,
                 warmup: float = 4.0) -> FaultKnees:

@@ -4,12 +4,17 @@ The implementations live in :mod:`repro.core.metrics` (pure stdlib) so
 the serving engine can share the LatencyStats/TailSLO vocabulary
 without importing the cluster runtime; cluster code and tests address
 them here. The fault-recovery accounting (windowed tails, recovery /
-drain times) rides the same re-export: both execution engines hand it
-their completion streams and report recovery in one vocabulary.
+drain times) rides the same re-export, as does the reliability
+accounting (goodput vs throughput, retry amplification, deadline-miss
+rate): both execution engines hand it their completion streams and
+report recovery in one vocabulary.
 """
-from repro.core.metrics import (LatencyStats, RecoveryReport, SLOReport,
-                                TailSLO, percentile, recovery_report,
+from repro.core.metrics import (LatencyStats, RecoveryReport,
+                                ReliabilityReport, SLOReport, TailSLO,
+                                goodput_timeline, percentile,
+                                recovery_report, reliability_report,
                                 windowed_percentile)
 
-__all__ = ["LatencyStats", "RecoveryReport", "SLOReport", "TailSLO",
-           "percentile", "recovery_report", "windowed_percentile"]
+__all__ = ["LatencyStats", "RecoveryReport", "ReliabilityReport",
+           "SLOReport", "TailSLO", "goodput_timeline", "percentile",
+           "recovery_report", "reliability_report", "windowed_percentile"]

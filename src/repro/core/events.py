@@ -31,6 +31,15 @@ STAGE_CATEGORIES = {
     "prefill": "ai", "decode": "ai",        # serving-engine AI stages
     "wait": "queue", "wait_frames": "queue", "reject": "queue",
     "requeue": "queue",   # fault rebalance: in-flight work re-enqueued
+    # reliability layer (retry/hedge/deadline lifecycle): duplicated or
+    # abandoned attempts are time the request spent fighting the
+    # infrastructure, not being processed — queue tax. ``degrade`` marks
+    # a request served in a reduced-accuracy mode; the saved work was
+    # post-processing (NMS re-rank / resolution), so the marker lands in
+    # the post bucket.
+    "retry": "queue", "hedge": "queue", "hedge_cancel": "queue",
+    "hedge_waste": "queue", "deadline_miss": "queue",
+    "degrade": "post",
     "transfer": "transfer",
 }
 

@@ -132,6 +132,10 @@ class SimResult:
     fault_events: int = 0           # fault-plan transitions applied
     scale_events: int = 0           # autoscaler actions applied
     final_consumers: int = 0        # alive consumers at sim end
+    # reliability accounting (runs with retry/breaker/degrade policies):
+    # the ReliabilityReport dict — goodput vs throughput, retry
+    # amplification, deadline misses, breaker/degrade timelines
+    reliability: dict | None = None
 
     def to_dict(self):
         return dict(self.__dict__)
@@ -144,7 +148,8 @@ class ClusterSim:
                  speedup: float = 1.0, scale: float = 0.05,
                  sim_time: float = 40.0, warmup: float = 8.0,
                  seed: int = 0, fault_plan=None, autoscale=None,
-                 n_partitions: int | None = None, sample_dt: float = 0.25):
+                 n_partitions: int | None = None, sample_dt: float = 0.25,
+                 retry=None, breaker=None, degrade=None):
         """``scale`` shrinks producer/consumer counts and broker bandwidth
         together, preserving utilizations and latencies while cutting the
         event count (840 producers -> 42 at scale=0.05).
@@ -158,7 +163,19 @@ class ClusterSim:
         consumer) with range assignment, kills requeue in-flight work,
         and the controller adds/removes members live. Without either,
         the legacy static path runs byte-identically to before (the
-        golden DES fixtures pin this)."""
+        golden DES fixtures pin this).
+
+        ``retry`` / ``breaker`` / ``degrade`` (RetryPolicy /
+        BreakerConfig / DegradePolicy-shaped objects from
+        ``repro.cluster.reliability``, duck-typed under the same
+        layering rule) put the client reliability lifecycle into the
+        simulation: attempt timeouts re-publish with jittered backoff,
+        hedges duplicate stragglers, per-partition breakers shed toward
+        healthy partitions, and the degradation ladder trades accuracy
+        for service time under pressure. They require unique message
+        keys (the default one-face-per-frame emulation) because the
+        lifecycle dedupes by request id, and they force the dynamic
+        path."""
         self.wl = wl
         self.bk = bk
         self.S = speedup
@@ -173,8 +190,12 @@ class ClusterSim:
         self.prod_ch = [_Channel() for _ in range(self.n_prod)]
         self.fault_plan = fault_plan
         self.autoscale = autoscale
+        self.retry = retry
+        self.breaker = breaker
+        self.degrade = degrade
         self.dynamic = (fault_plan is not None or autoscale is not None
-                        or n_partitions is not None)
+                        or n_partitions is not None or retry is not None
+                        or breaker is not None or degrade is not None)
         self.n_partitions = n_partitions or self.n_cons
         self.sample_dt = sample_dt
         self.topic = Topic("faces", self.n_partitions, bk)
@@ -193,6 +214,23 @@ class ClusterSim:
         self.scale_actions: list = []
         self.generation = 0
         self._final_alive = self.n_cons
+        # reliability state (inert unless retry/breaker/degrade are set)
+        self._send = None                       # publish hook for _do_tick
+        self._breakers: dict[int, object] = {}  # partition -> CircuitBreaker
+        self._completed_map: dict[int, float] = {}   # rid -> t of first win
+        self._rel_state: dict[int, dict] = {}        # rid -> attempts/t0
+        self.rel_offered = 0
+        self.rel_attempts = 0
+        self.rel_retries = 0
+        self.rel_hedges = 0
+        self.rel_hedge_cancels = 0
+        self.rel_hedge_wastes = 0
+        self.rel_deadline_misses = 0
+        self.rel_sheds = 0
+        self._deg_depth = 0
+        self.degrade_timeline: list = []             # (t, depth, level name)
+        self._acc_sum = 0.0
+        self._acc_n = 0
 
     # ---- run ---------------------------------------------------------------
 
@@ -292,10 +330,79 @@ class ClusterSim:
         next_cid = self.n_cons
         consumer_free = {c: 0.0 for c in alive}
         epoch = {c: 0 for c in alive}
-        inflight: dict[int, list] = {c: [] for c in alive}  # [(pi, msg)] FIFO
+        # inflight entries are (pi, msg, accuracy_proxy) FIFO
+        inflight: dict[int, list] = {c: [] for c in alive}
         owner: dict[int, int] = {}                          # partition -> member
         drives = {b: self.bk.drives_per_broker
                   for b in range(self.bk.n_brokers)}
+
+        # ---- client reliability lifecycle (retry / hedge / breaker) ----
+        retry, degrade = self.retry, self.degrade
+        rel_on = retry is not None
+        rel_active = (retry is not None or self.breaker is not None
+                      or degrade is not None)
+        # reliability runs poll bounded batches (the live replica's
+        # fetch quantum) and re-poll: a member must not serialize an
+        # outage-deep queue onto itself — after a revive the NEW owner
+        # takes the remainder, exactly like the live sweep re-reading
+        # ownership between batches. Plain dynamic runs keep the greedy
+        # poll the golden fixtures pin.
+        poll_cap = (max(1, int(self.bk.fetch_min_bytes
+                               // max(wl.face_bytes, 1.0)))
+                    if rel_active else None)
+        if self.breaker is not None:
+            self._breakers = {pi: self.breaker.make(pi)
+                              for pi in range(self.n_partitions)}
+
+        def pick_part_allowed(t):
+            # one round-robin candidate per attempt: its breaker either
+            # admits or the attempt is shed (and retried against the
+            # NEXT partition after backoff). Scanning for any willing
+            # partition instead would compound per-partition probe
+            # rates into near-certain admission and defeat the breaker.
+            part = self.topic.pick_partition()
+            b = self._breakers.get(part.index)
+            if b is None or b.allow(t):
+                return part
+            return None
+
+        def rel_send(msg, push, origin="attempt"):
+            # publish one attempt (first / retry / hedge) through the
+            # breaker-aware partition pick; schedules its own timeout
+            # check, plus the request's deadline check and hedge on the
+            # first attempt
+            rid = msg.key
+            st = self._rel_state.get(rid)
+            if st is None:
+                st = self._rel_state[rid] = {"n": 0, "t0": msg.t_produced}
+                self.rel_offered += 1
+                if rel_on:
+                    push(st["t0"] + retry.deadline_s, "dlcheck", {"rid": rid})
+                    if retry.hedge_delay_s is not None:
+                        push(msg.t_published + retry.hedge_delay_s, "hedge",
+                             {"rid": rid, "size": msg.size})
+            st["n"] += 1
+            self.rel_attempts += 1
+            retryable = rel_on and origin != "hedge"
+            part = pick_part_allowed(msg.t_published)
+            if part is None:
+                self.rel_sheds += 1
+                self.log.log(rid, "reject", msg.t_published, msg.t_published,
+                             int(msg.size), reason="breaker_open")
+                # a shed attempt fails instantly: back off and retry
+                if retryable and retry.retry_allowed(
+                        msg.t_published, st["t0"], st["n"]):
+                    push(msg.t_published + retry.backoff_s(rid, st["n"]),
+                         "republish", {"rid": rid, "size": msg.size})
+                return
+            self._route(msg, part, push)
+            if rel_on:
+                push(msg.t_published + retry.attempt_timeout_s, "rcheck",
+                     {"rid": rid, "pi": part.index, "size": msg.size,
+                      "retryable": retryable})
+
+        if rel_on or self._breakers:
+            self._send = rel_send
 
         def rebalance(t):
             self.generation += 1
@@ -311,7 +418,7 @@ class ClusterSim:
             # back to the partitions — never dropped, so the five-way
             # attribution keeps summing to 1 through a fault
             epoch[cid] += 1
-            for pi, m in reversed(inflight[cid]):
+            for pi, m, _acc in reversed(inflight[cid]):
                 self.topic.partitions[pi].backlog.insert(0, (t, m))
                 self.log.log(m.key, "requeue", t, t, int(m.size))
                 self.requeues += 1
@@ -413,31 +520,131 @@ class ClusterSim:
                     push(max(oldest + self.bk.fetch_max_wait_s, t_free)
                          + 1e-9, "poll", {"pi": pi})
                     continue
-                batch, part.backlog = list(part.backlog), []
+                if poll_cap is None or len(part.backlog) <= poll_cap:
+                    batch, part.backlog = list(part.backlog), []
+                else:
+                    batch = part.backlog[:poll_cap]
+                    part.backlog = part.backlog[poll_cap:]
+                if rel_on:
+                    # request-id dedupe at dequeue: a duplicate whose
+                    # twin already won is cancelled before costing any
+                    # service time (the cheap hedge outcome)
+                    fresh = []
+                    for tt, m in batch:
+                        if m.key in self._completed_map:
+                            self.rel_hedge_cancels += 1
+                            self.log.log(m.key, "hedge_cancel", t_free,
+                                         t_free, int(m.size))
+                        else:
+                            fresh.append((tt, m))
+                    batch = fresh
+                    if not batch:
+                        continue
+                lvl = degrade.level(self._deg_depth) if degrade else None
+                dur = wl.t_identify / S * (lvl.service_factor if lvl else 1.0)
+                acc = lvl.accuracy_proxy if lvl else 1.0
                 t_busy = t_free
                 for _, m in batch:
                     m.t_consumed = t_busy
-                    dur = wl.t_identify / S
-                    inflight[ci].append((pi, m))
+                    inflight[ci].append((pi, m, acc))
                     push(t_busy + dur, "done",
                          {"ci": ci, "epoch": epoch[ci], "t_start": t_busy})
                     t_busy += dur
                 consumer_free[ci] = t_busy
+                if part.backlog:
+                    # bounded fetch left a remainder: re-poll when this
+                    # member frees up (whoever owns the partition THEN
+                    # takes it — the rebalance window)
+                    push(t_busy, "poll", {"pi": pi})
             elif kind == "done":
                 ci = pl["ci"]
                 if pl["epoch"] != epoch.get(ci, -1) or not inflight[ci]:
                     continue            # fenced: member killed/shrunk away
-                pi, m = inflight[ci].pop(0)
+                pi, m, acc = inflight[ci].pop(0)
+                b = self._breakers.get(pi)
+                if b is not None and not (
+                        rel_on and t - m.t_published
+                        > retry.attempt_timeout_s + 1e-12):
+                    # a late completion is not a success signal: its
+                    # rcheck already recorded the timeout as the outcome
+                    b.record(t, True)
+                if rel_on:
+                    if m.key in self._completed_map:
+                        # both attempts were in service at once: the
+                        # loser's span is wasted work, not a completion
+                        self.rel_hedge_wastes += 1
+                        self.log.log(m.key, "hedge_waste", pl["t_start"], t,
+                                     int(m.size))
+                        continue
+                    self._completed_map[m.key] = t
                 self.log.log(m.key, "wait", m.t_produced, m.t_consumed,
                              int(m.size))
                 self.log.log(m.key, "identify", pl["t_start"], t,
                              int(m.size))
+                if acc < 1.0:
+                    name = next((l.name for l in degrade.levels
+                                 if l.accuracy_proxy == acc), "degraded")
+                    self.log.log(m.key, "degrade", t, t, int(m.size),
+                                 accuracy_proxy=acc, level=name)
+                self._acc_sum += acc
+                self._acc_n += 1
                 self.msgs.append(m)
                 self.completions.append((t, t - m.t_produced))
             elif kind == "fault":
                 apply_fault(t, pl["ev"])
+            elif kind == "rcheck":
+                # attempt timeout: presumed lost -> breaker failure, and
+                # (for the primary chain) a backed-off re-publish
+                rid = pl["rid"]
+                if rid in self._completed_map:
+                    continue
+                b = self._breakers.get(pl["pi"])
+                if b is not None:
+                    b.record(t, False)
+                st = self._rel_state[rid]
+                if (pl["retryable"]
+                        and retry.retry_allowed(t, st["t0"], st["n"])):
+                    push(t + retry.backoff_s(rid, st["n"]), "republish",
+                         {"rid": rid, "size": pl["size"]})
+            elif kind == "republish":
+                rid = pl["rid"]
+                if rid in self._completed_map:
+                    continue
+                self.rel_retries += 1
+                self.log.log(rid, "retry", t, t, int(pl["size"]))
+                m2 = Message(key=rid, size=pl["size"],
+                             t_produced=self._rel_state[rid]["t0"])
+                m2.t_published = t + self.bk.linger_s
+                self._published += 1
+                rel_send(m2, push, "retry")
+            elif kind == "hedge":
+                rid = pl["rid"]
+                if rid in self._completed_map:
+                    continue
+                self.rel_hedges += 1
+                self.log.log(rid, "hedge", t, t, int(pl["size"]))
+                m2 = Message(key=rid, size=pl["size"],
+                             t_produced=self._rel_state[rid]["t0"])
+                m2.t_published = t + self.bk.linger_s
+                self._published += 1
+                rel_send(m2, push, "hedge")
+            elif kind == "dlcheck":
+                rid = pl["rid"]
+                if rid not in self._completed_map:
+                    self.rel_deadline_misses += 1
+                    self.log.log(rid, "deadline_miss", t, t)
             elif kind == "sample":
                 self.depth_samples.append((t, backlog_now()))
+                if degrade is not None:
+                    per = backlog_now() / max(len(alive), 1)
+                    bs = list(self._breakers.values())
+                    of = (sum(1 for b in bs if b.state != "closed")
+                          / len(bs)) if bs else 0.0
+                    nd = degrade.decide(per, of, self._deg_depth)
+                    if nd != self._deg_depth:
+                        self._deg_depth = nd
+                        self.degrade_timeline.append(
+                            (t, nd, degrade.level(nd).name))
                 push(t + self.sample_dt, "sample", {})
             elif kind == "ctl":
                 horizon = 4 * self.autoscale.interval_s
@@ -495,19 +702,25 @@ class ClusterSim:
                 self._published += 1
                 msg = Message(key=rid, size=wl.face_bytes, t_produced=t_busy)
                 msg.t_published = t_sent + self.bk.linger_s
-                part = self.topic.pick_partition()
-                if part.leader in self._stalled:
-                    # fault engine: the leader's write channel is down.
-                    # Defer the submission; restore replays it (legacy
-                    # path never populates _stalled, so never comes here)
-                    self._stall_buf.setdefault(part.leader, []).append(
-                        (part, msg))
+                if self._send is not None:
+                    # reliability lifecycle owns partition choice and
+                    # timeout/hedge scheduling for this attempt
+                    self._send(msg, push)
                     continue
-                wch = self.write_ch[part.leader]
-                t_avail = wch.submit_bytes(
-                    msg.t_published, msg.size + self.bk.write_overhead_bytes)
-                push(t_avail, "deliver", {"part": part, "msg": msg})
+                self._route(msg, self.topic.pick_partition(), push)
         push(t + period, "tick", {"producer": p, "scheduled": t + period})
+
+    def _route(self, msg, part, push):
+        """Hand one message to its leader's write channel (or the stall
+        buffer while the fault engine has that broker down — the legacy
+        path never populates ``_stalled``, so never defers)."""
+        if part.leader in self._stalled:
+            self._stall_buf.setdefault(part.leader, []).append((part, msg))
+            return
+        wch = self.write_ch[part.leader]
+        t_avail = wch.submit_bytes(
+            msg.t_published, msg.size + self.bk.write_overhead_bytes)
+        push(t_avail, "deliver", {"part": part, "msg": msg})
 
     # ---- results -----------------------------------------------------------
 
@@ -534,8 +747,12 @@ class ClusterSim:
         # a saturated write channel accumulates its queue as deliveries
         # scheduled past sim_time: published-but-never-written messages
         # are backlog too, or storage saturation would be invisible to
-        # the measured signal (consumed + partition backlog both stall)
-        unwritten = self._published - len(self.msgs) - backlog
+        # the measured signal (consumed + partition backlog both stall).
+        # Deduped duplicates and shed attempts were published but can
+        # never complete — they are amplification, not backlog.
+        dups = (self.rel_hedge_cancels + self.rel_hedge_wastes
+                + self.rel_sheds)
+        unwritten = self._published - len(self.msgs) - backlog - dups
         diverged = ((backlog + unwritten) > 0.08 * max(self._published, 1)
                     or d_mean > 5 * wl.frame_period)
         # instability = measured divergence OR analytic rho >= 1 (a short
@@ -572,7 +789,36 @@ class ClusterSim:
             backlog=backlog, unwritten=unwritten, diverged=diverged,
             requeues=self.requeues, fault_events=len(self.fault_applied),
             scale_events=len(self.scale_actions),
-            final_consumers=self._final_alive)
+            final_consumers=self._final_alive,
+            reliability=self._reliability_dict())
+
+    def _reliability_dict(self) -> dict | None:
+        if (self.retry is None and self.breaker is None
+                and self.degrade is None):
+            return None
+        from repro.core.metrics import reliability_report
+        timeline = sorted((tt, pi, s)
+                          for pi, b in sorted(self._breakers.items())
+                          for tt, s in b.timeline)
+        # without a retry policy every publish is its own sole attempt
+        offered = (self.rel_offered if self.retry is not None
+                   else self._published)
+        attempts = (self.rel_attempts if self.retry is not None
+                    else self._published)
+        deadline = (self.retry.deadline_s if self.retry is not None
+                    else float("inf"))
+        return reliability_report(
+            self.completions, deadline, max(self.sim_time, 1e-9),
+            offered=offered, attempts=attempts,
+            deadline_misses=self.rel_deadline_misses,
+            retries=self.rel_retries, hedges=self.rel_hedges,
+            hedge_cancels=self.rel_hedge_cancels,
+            hedge_wastes=self.rel_hedge_wastes,
+            breaker_sheds=self.rel_sheds,
+            accuracy_proxy_mean=(self._acc_sum / self._acc_n
+                                 if self._acc_n else 1.0),
+            breaker_timeline=timeline,
+            degrade_timeline=self.degrade_timeline).to_dict()
 
     def _drive_eff(self) -> float:
         d = self.bk.drives_per_broker

@@ -183,8 +183,8 @@ class PreprocessStage:
 
     # ---- post-processing --------------------------------------------------
 
-    def postprocess(self, hms: np.ndarray, pool: int, rids=None,
-                    ) -> list[list[tuple[int, int]]]:
+    def postprocess(self, hms: np.ndarray, pool: int, rids=None, *,
+                    skip_nms: bool = False) -> list[list[tuple[int, int]]]:
         """(B, Hc, Wc) detection heatmaps -> face centers per frame.
 
         Threshold + greedy IoU NMS over top-k candidate cells; centers
@@ -192,11 +192,30 @@ class PreprocessStage:
         pool//2``), best-first — the same contract as
         ``facerec.detect_faces_batch``. Host and device placements make
         bit-identical keep decisions.
+
+        ``skip_nms=True`` is the graceful-degradation cheap path
+        (``DegradeLevel.post_nms`` False): threshold + plain top-k by
+        score, no IoU re-rank. It runs on the host regardless of
+        placement — the saving IS not launching the suppression
+        program — and nearby duplicate detections are the accuracy
+        cost the degrade ladder prices.
         """
         rids = list(rids) if rids is not None else list(range(len(hms)))
         p = self.post
         t0 = time.perf_counter()
         centers: list[list[tuple[int, int]]] = []
+        if skip_nms:
+            for hm in hms:
+                boxes, scores = _host.topk_boxes_from_heatmap(
+                    hm, p.max_candidates, box_cells=p.box_cells)
+                # scores come back best-first: the first max_faces over
+                # the bar are the plain top-k keeps
+                keep = [i for i in range(len(scores))
+                        if scores[i] >= p.score_thresh][:p.max_faces]
+                centers.append(self._centers(boxes[keep], pool))
+            self._log_span("post_nms", rids, t0, time.perf_counter(),
+                           hms.nbytes)
+            return centers
         if self.placement == "host":
             for hm in hms:
                 boxes, scores = _host.topk_boxes_from_heatmap(

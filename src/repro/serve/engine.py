@@ -43,12 +43,22 @@ class Request:
 class ServingEngine:
     def __init__(self, model, params, *, batch_slots: int = 4,
                  cache_len: int = 128, greedy: bool = True,
-                 fast_path: bool = True, max_queue: int | None = None):
+                 fast_path: bool = True, max_queue: int | None = None,
+                 degrade=None):
         self.model = model
         self.params = params
         self.slots = batch_slots
         self.cache_len = cache_len
         self.log = EventLog()
+        # graceful degradation (duck-typed DegradePolicy, same ladder
+        # as the serving cluster): under queue pressure, admitted
+        # requests get max_tokens clamped by the current level's
+        # service_factor — shorter generations shed work before
+        # admission control sheds requests — with the accuracy cost
+        # logged as a zero-span "degrade" event per clamped request
+        self.degrade = degrade
+        self._deg_depth = 0
+        self.degrade_timeline: list[tuple[float, int, str]] = []
         # admission bound: submissions beyond max_queue pending requests
         # are rejected at the door (logged as zero-span "reject" events,
         # so ai_tax()/latency_report() see the shed load); None = accept
@@ -126,12 +136,34 @@ class ServingEngine:
         steps = 0
         while (any(self.active) or not self._pending.empty()) \
                 and steps < max_steps:
+            # degradation ladder: queue depth per slot is the engine's
+            # per-replica backlog analogue (no breakers here, so the
+            # open fraction input is 0)
+            if self.degrade is not None:
+                depth = self.degrade.decide(
+                    self.queue_depth / max(self.slots, 1), 0.0,
+                    self._deg_depth)
+                if depth != self._deg_depth:
+                    self._deg_depth = depth
+                    self.degrade_timeline.append(
+                        (time.perf_counter(), depth,
+                         self.degrade.level(depth).name))
             # admit: drain the submission topic into free slots
             free = [i for i in range(self.slots) if self.active[i] is None]
             if free:
                 for i, req in zip(free, self.admission.poll(len(free))):
                     self.log.log(req.rid, "wait", req.t_submit,
                                  time.perf_counter())
+                    if self.degrade is not None and self._deg_depth > 0:
+                        lvl = self.degrade.level(self._deg_depth)
+                        cap = max(1, int(req.max_tokens
+                                         * lvl.service_factor))
+                        if cap < req.max_tokens:
+                            req.max_tokens = cap
+                            t = time.perf_counter()
+                            self.log.log(req.rid, "degrade", t, t,
+                                         accuracy_proxy=lvl.accuracy_proxy,
+                                         level=lvl.name)
                     caches[i], _ = self._prefill_one(req)
                     self.active[i] = req
             # lock-step decode over occupied slots

@@ -1,0 +1,31 @@
+"""Fixture: blocking waits while holding a lock in thread code.
+
+Must trip sleep-under-lock and ONLY sleep-under-lock: a lexical
+time.sleep under `with self._lock`, an Event.wait under the same, and
+a helper with no `with` of its own that every caller invokes while
+holding the lock (the interprocedural lock-context rule).
+"""
+import threading
+import time
+
+
+class Poller:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self.t = threading.Thread(target=self._loop)
+
+    def _loop(self):
+        while True:
+            with self._lock:
+                time.sleep(0.01)
+                self._nap()
+            self._wait_locked()
+
+    def _wait_locked(self):
+        with self._lock:
+            self._stop.wait(0.01)
+
+    def _nap(self):
+        # inherits the lock context: its only caller holds _lock
+        time.sleep(0.01)

@@ -1,0 +1,22 @@
+"""Fixture: the same shape as sleepunderlock_bad, waits done right.
+
+Must produce zero findings: Condition.wait on the condition's own lock
+(wait atomically releases it — the sanctioned pattern), time.sleep
+with no lock held, and an Event.wait outside any critical section.
+"""
+import threading
+import time
+
+
+class Poller:
+    def __init__(self):
+        self._cv = threading.Condition()
+        self._stop = threading.Event()
+        self.t = threading.Thread(target=self._loop)
+
+    def _loop(self):
+        while True:
+            with self._cv:
+                self._cv.wait(0.01)
+            time.sleep(0.01)
+            self._stop.wait(0.01)

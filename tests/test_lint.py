@@ -71,11 +71,23 @@ def test_jit_bad_trips_only_jit_purity_check():
     assert "deeper:open" in idents
 
 
+def test_sleep_bad_trips_only_sleep_under_lock():
+    fs = lint_fixture("sleepunderlock_bad.py")
+    assert fs, "sleepunderlock_bad.py produced no findings"
+    assert rules_of(fs) == ["sleep-under-lock"]
+    idents = {f.ident for f in fs}
+    assert "Poller._loop:time.sleep" in idents
+    assert "Poller._wait_locked:threading.Event.wait" in idents
+    # the helper with no `with` of its own — caught via the fixpoint
+    assert "Poller._nap:time.sleep" in idents
+
+
 # ---- good twins are clean ---------------------------------------------------
 
 def test_good_fixtures_are_clean():
     for name in ("race_good.py", "lockorder_good.py",
-                 "taxstage_good.py", "jit_good.py"):
+                 "taxstage_good.py", "jit_good.py",
+                 "sleepunderlock_good.py"):
         fs = lint_fixture(name)
         assert fs == [], f"{name}: {[f.format() for f in fs]}"
 

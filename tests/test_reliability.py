@@ -1,0 +1,300 @@
+"""Reliability layer: policies, breaker state machine, both engines.
+
+Property-style tests use hypothesis when installed and degrade to one
+representative example via the deterministic fallback otherwise; the
+engine-level tests drive the DES (and one small live cluster) with the
+same policy objects the benchmark uses.
+"""
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    from hypothesis_fallback import given, settings, st
+
+from repro.cluster.cluster import ClusterSpec, ServingCluster
+from repro.cluster.faults import FaultPlan
+from repro.cluster.reliability import (CLOSED, HALF_OPEN, OPEN,
+                                       BreakerConfig, DegradeLevel,
+                                       DegradePolicy, RetryPolicy,
+                                       open_fraction)
+from repro.configs import get_config
+from repro.core import facerec
+from repro.core.broker import BrokerConfig
+from repro.core.metrics import goodput_timeline, reliability_report
+from repro.core.simulator import ClusterSim, FaceRecWorkload
+from repro.models.model import build_model
+from repro.serve.engine import Request, ServingEngine
+
+
+# ---- retry policy -----------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 500), st.integers(1, 8), st.integers(0, 99))
+def test_backoff_jitter_bounded_and_deterministic(rid, attempt, seed):
+    p = RetryPolicy(backoff_base_s=0.02, backoff_cap_s=0.25, seed=seed)
+    d = p.backoff_s(rid, attempt)
+    hi = min(p.backoff_cap_s, p.backoff_base_s * 2.0 ** (attempt - 1))
+    assert p.backoff_base_s <= d <= hi + 1e-12
+    # same (seed, rid, attempt) -> same draw, in any engine
+    assert p.backoff_s(rid, attempt) == d
+
+
+def test_backoff_seed_actually_jitters():
+    # attempt 1 has a degenerate [base, base] range; from attempt 2 on
+    # different seeds must not resynchronize a storm into lockstep
+    a = RetryPolicy(seed=0)
+    b = RetryPolicy(seed=1)
+    draws_a = [a.backoff_s(rid, 2) for rid in range(8)]
+    draws_b = [b.backoff_s(rid, 2) for rid in range(8)]
+    assert draws_a != draws_b
+    assert len(set(draws_a)) > 1          # jitter across request ids too
+
+
+def test_retry_allowed_caps_attempts_and_respects_deadline():
+    p = RetryPolicy(deadline_s=1.0, attempt_timeout_s=0.3, max_attempts=3)
+    assert p.retry_allowed(0.1, 0.0, 1)
+    assert not p.retry_allowed(0.1, 0.0, 3)          # attempt cap
+    # a retry that could not publish before the deadline is pointless
+    assert not p.retry_allowed(0.999, 0.0, 1)
+    with pytest.raises(ValueError):
+        p.backoff_s(0, 0)
+
+
+def test_retry_policy_validation():
+    with pytest.raises(ValueError):
+        RetryPolicy(max_attempts=0)
+    with pytest.raises(ValueError):
+        RetryPolicy(backoff_base_s=0.5, backoff_cap_s=0.1)
+    with pytest.raises(ValueError):
+        RetryPolicy(hedge_delay_s=0.0)
+    with pytest.raises(ValueError):
+        RetryPolicy(deadline_s=0.0)
+
+
+# ---- circuit breaker --------------------------------------------------------
+
+def _trip(b, t0, n=4):
+    for i in range(n):
+        b.record(t0 + 0.01 * i, False)
+
+
+def test_breaker_full_state_walk():
+    cfg = BreakerConfig(window_s=1.0, failure_threshold=0.5, min_volume=4,
+                        open_s=0.5, probe_rate=1.0, close_after=2, seed=0)
+    b = cfg.make(0)
+    assert b.state == CLOSED and b.allow(0.0)
+    _trip(b, 0.0)                                  # 4/4 failures in window
+    assert b.state == OPEN
+    assert not b.allow(0.2)                        # open: everything shed
+    assert b.allow(0.03 + 0.5 + 0.01)              # open_s elapsed -> probe
+    assert b.state == HALF_OPEN
+    b.record(0.6, True)
+    assert b.state == HALF_OPEN                    # 1 of close_after=2
+    b.record(0.7, True)
+    assert b.state == CLOSED                       # probe streak closed it
+    _trip(b, 1.0)                                  # window cleared on close,
+    assert b.state == OPEN                         # so it trips fresh
+    assert b.allow(1.7)                            # half-open again
+    b.record(1.7, False)                           # probe failure
+    assert b.state == OPEN                         # -> straight back open
+    states = [s for _, s in b.timeline]
+    assert states[0] == CLOSED and states.count(OPEN) == 3
+
+
+def test_breaker_needs_min_volume_and_window_prunes():
+    cfg = BreakerConfig(window_s=0.5, failure_threshold=0.5, min_volume=5,
+                        open_s=1.0)
+    b = cfg.make(0)
+    _trip(b, 0.0, n=4)                             # below min_volume
+    assert b.state == CLOSED
+    b.record(5.0, False)                           # old failures pruned:
+    assert b.state == CLOSED                       # 1/1 but volume 1 < 5
+
+
+def test_breaker_probe_admission_seeded_deterministic():
+    cfg = BreakerConfig(min_volume=2, open_s=0.1, probe_rate=0.5, seed=7)
+    a, b = cfg.make(3), cfg.make(3)
+    for br in (a, b):
+        _trip(br, 0.0, n=2)
+    seq_a = [a.allow(1.0 + 0.01 * i) for i in range(20)]
+    seq_b = [b.allow(1.0 + 0.01 * i) for i in range(20)]
+    assert seq_a == seq_b                          # same (seed, key)
+    assert True in seq_a and False in seq_a        # it is actually a rate
+
+
+def test_open_fraction():
+    cfg = BreakerConfig(min_volume=2)
+    bs = [cfg.make(i) for i in range(4)]
+    _trip(bs[0], 0.0, n=2)
+    _trip(bs[1], 0.0, n=2)
+    assert open_fraction(bs) == 0.5
+    assert open_fraction([]) == 0.0
+
+
+def test_breaker_config_validation():
+    with pytest.raises(ValueError):
+        BreakerConfig(probe_rate=0.0)
+    with pytest.raises(ValueError):
+        BreakerConfig(failure_threshold=1.5)
+    with pytest.raises(ValueError):
+        BreakerConfig(min_volume=0)
+
+
+# ---- degradation ladder -----------------------------------------------------
+
+def test_degrade_ladder_engage_override_and_hysteresis():
+    p = DegradePolicy()                            # enter 16 / exit 4
+    assert p.decide(0.0, 0.0, 0) == 0
+    assert p.decide(17.0, 0.0, 0) == 1             # one rung per 16
+    assert p.decide(33.0, 0.0, 0) == 2
+    assert p.decide(999.0, 0.0, 0) == 2            # clamped to ladder depth
+    assert p.decide(0.0, 0.6, 0) == 2              # breakers open: deepest
+    # hysteresis: above exit_backlog the depth holds...
+    assert p.decide(10.0, 0.0, 2) == 2
+    # ...and recovery climbs ONE rung at a time, only under exit_backlog
+    assert p.decide(3.0, 0.0, 2) == 1
+    assert p.decide(3.0, 0.0, 1) == 0
+
+
+def test_degrade_levels_and_validation():
+    p = DegradePolicy()
+    assert p.level(0).service_factor == 1.0 and p.level(0).post_nms
+    assert p.level(1).name == "skip_rerank" and not p.level(1).post_nms
+    assert p.level(99) is p.levels[-1]             # deeper than the ladder
+    assert p.level(2).letterbox_scale < 1.0
+    with pytest.raises(ValueError):
+        DegradePolicy(enter_backlog=4.0, exit_backlog=4.0)
+    with pytest.raises(ValueError):
+        DegradeLevel(service_factor=1.5)
+    with pytest.raises(ValueError):
+        DegradeLevel(accuracy_proxy=0.0)
+
+
+# ---- report plumbing --------------------------------------------------------
+
+def test_reliability_report_math():
+    rep = reliability_report([(1.0, 0.5), (2.0, 1.5)], 1.0, 10.0,
+                             offered=4, attempts=6)
+    assert rep.completed == 2 and rep.in_deadline == 1
+    assert rep.throughput == pytest.approx(0.2)
+    assert rep.goodput == pytest.approx(0.1)
+    assert rep.amplification == pytest.approx(1.5)
+    assert rep.deadline_miss_rate == pytest.approx(0.75)
+    with pytest.raises(ValueError):
+        reliability_report([], 1.0, 0.0, offered=0, attempts=0)
+
+
+def test_goodput_timeline_emits_empty_windows():
+    tl = goodput_timeline([(0.5, 0.1), (3.5, 0.1), (3.6, 9.9)], 1.0, 1.0)
+    assert tl == [(1.0, 1.0), (2.0, 0.0), (3.0, 0.0), (4.0, 1.0)]
+    assert goodput_timeline([], 1.0, 1.0) == []
+
+
+# ---- DES lifecycle ----------------------------------------------------------
+
+def _storm(**kw):
+    kw.setdefault("retry", RetryPolicy(deadline_s=2.0, attempt_timeout_s=0.6,
+                                       max_attempts=4, backoff_base_s=0.02,
+                                       backoff_cap_s=0.2, seed=1))
+    return ClusterSim(FaceRecWorkload(), BrokerConfig(), speedup=4.0,
+                      scale=0.01, sim_time=8.0, warmup=1.0, seed=0,
+                      fault_plan=FaultPlan.kill_revive(2.0, 4.0, n=6), **kw)
+
+
+def test_des_reliability_deterministic_per_seed():
+    cfg = BreakerConfig(min_volume=5, open_s=1.0, probe_rate=0.1, seed=2)
+    r1 = _storm(breaker=cfg).run()
+    r2 = _storm(breaker=cfg).run()
+    assert r1.reliability == r2.reliability
+    assert r1.reliability["retries"] > 0           # the storm actually ran
+
+
+def test_des_attempt_accounting_identity():
+    # every publish is the first attempt, a retry, or a hedge — nothing
+    # else mints attempts, in either engine
+    rel = _storm().run().reliability
+    assert rel["attempts"] == (rel["offered"] + rel["retries"]
+                               + rel["hedges"])
+    assert rel["amplification"] == pytest.approx(
+        rel["attempts"] / rel["offered"])
+    assert rel["completed"] <= rel["offered"]
+
+
+def test_des_hedging_never_double_counts():
+    sim = ClusterSim(FaceRecWorkload(), BrokerConfig(), speedup=4.0,
+                     scale=0.01, sim_time=6.0, warmup=1.0, seed=0,
+                     retry=RetryPolicy(deadline_s=2.0, attempt_timeout_s=1.0,
+                                       max_attempts=2, hedge_delay_s=0.2,
+                                       seed=3))
+    rel = sim.run().reliability
+    assert rel["hedges"] > 0
+    # a duplicate is cancelled at dequeue or served-and-wasted; never both
+    assert rel["hedge_cancels"] + rel["hedge_wastes"] <= rel["hedges"]
+    assert rel["completed"] <= rel["offered"]      # dedupe by request id
+    fw = sim.log.five_way(facerec.stage_category)
+    assert sum(fw.values()) == pytest.approx(1.0)
+
+
+def test_des_breaker_sheds_and_timeline_under_storm():
+    rel = _storm(breaker=BreakerConfig(window_s=1.0, min_volume=5,
+                                       open_s=1.0, probe_rate=0.1,
+                                       seed=2)).run().reliability
+    assert rel["breaker_sheds"] > 0
+    opens = [s for _, _, s in rel["breaker_timeline"] if s == OPEN]
+    assert opens                                   # the outage tripped it
+    assert rel["deadline_misses"] > 0
+
+
+def test_des_degrade_books_accuracy_cost():
+    r = ClusterSim(FaceRecWorkload(), BrokerConfig(), speedup=4.0,
+                   scale=0.01, sim_time=8.0, warmup=1.0, seed=0,
+                   fault_plan=FaultPlan.kill_revive(2.0, 4.0, n=10),
+                   degrade=DegradePolicy()).run()
+    rel = r.reliability
+    assert rel["degrade_timeline"]                 # ladder engaged
+    assert rel["accuracy_proxy_mean"] < 1.0        # cost on the books
+
+
+# ---- live cluster -----------------------------------------------------------
+
+def test_live_cluster_reliability_smoke():
+    spec = ClusterSpec(
+        sim_time=3.0, warmup=1.0, speedup=4.0,
+        retry=RetryPolicy(deadline_s=2.0, attempt_timeout_s=1.0,
+                          max_attempts=2, seed=1),
+        breaker=BreakerConfig(min_volume=5, open_s=1.0, seed=2))
+    res = ServingCluster(spec).run()
+    rel = res.reliability
+    assert rel is not None and rel["offered"] > 0
+    assert rel["attempts"] == (rel["offered"] + rel["retries"]
+                               + rel["hedges"])
+    # healthy cluster: little to no retry amplification, real goodput
+    assert 1.0 <= rel["amplification"] < 1.5
+    assert rel["goodput"] > 0
+    fw = res.log.five_way(facerec.stage_category)
+    assert sum(fw.values()) == pytest.approx(1.0)
+
+
+# ---- serving engine degradation --------------------------------------------
+
+def test_engine_degrade_clamps_generation_under_pressure():
+    cfg = get_config("llama3-8b", smoke=True).replace(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(model, params, batch_slots=1, cache_len=48,
+                        degrade=DegradePolicy(enter_backlog=2.0,
+                                              exit_backlog=1.0))
+    rng = np.random.default_rng(0)
+    for rid in range(6):
+        eng.submit(Request(rid, rng.integers(0, cfg.vocab_size, 8),
+                           max_tokens=12))
+    done = eng.run()
+    assert len(done) == 6
+    degrades = [e for e in eng.log.events if e.stage == "degrade"]
+    assert degrades, "queue pressure never engaged the ladder"
+    assert any(len(r.tokens) < 12 for r in done)   # generations clamped
+    assert all(r.tokens for r in done)             # but never to zero
+    assert eng.degrade_timeline
