@@ -27,6 +27,13 @@
 #                      benchmarks/run.py MODULES cover every benchmark,
 #                      public src/repro modules carry docstrings
 #                      (docs-lint is an alias)
+#   make decode-smoke - CI-sized continuous-batching battery: batched
+#                      decode must beat the per-slot baseline >=2x on
+#                      decode tokens/sec with p99 TTFT no worse and the
+#                      per-token d2h round-trips collapsed slots-fold,
+#                      transfer ledger balanced against the engine's
+#                      physical fetch counters (RuntimeError on gate
+#                      failure)
 #   make preprocess-smoke - acceleration x placement sweep over the
 #                      preprocess subsystem with its three assertions
 #                      (host fraction grows, device >=2x cheaper at the
@@ -46,8 +53,8 @@
 #                      lint_baseline.json; exit 0 clean / 1 findings /
 #                      2 internal error (see docs/static_analysis.md)
 .PHONY: test coverage bench-smoke cluster-smoke faults-smoke \
-	reliability-smoke preprocess-smoke bench-diff calibrate docs-lint \
-	docs-check des-golden autotune autotune-check lint check
+	reliability-smoke preprocess-smoke decode-smoke bench-diff calibrate \
+	docs-lint docs-check des-golden autotune autotune-check lint check
 
 PY := PYTHONPATH=src python
 
@@ -71,7 +78,7 @@ coverage:
 
 bench-smoke:
 	$(PY) -m benchmarks.run --only fig09
-	$(PY) -m benchmarks.run --only batching
+	$(PY) -m benchmarks.run --only batching_sweep
 
 cluster-smoke:
 	$(PY) -m benchmarks.fig_cluster_scaling --smoke
@@ -87,6 +94,9 @@ bench-diff:
 
 preprocess-smoke:
 	$(PY) -m benchmarks.fig_preprocess_offload --smoke
+
+decode-smoke:
+	$(PY) -m benchmarks.fig_decode_batching --smoke
 
 des-golden:
 	$(PY) scripts/gen_des_golden.py
@@ -109,4 +119,4 @@ lint:
 	$(PY) scripts/lint.py
 
 check: test bench-smoke faults-smoke reliability-smoke preprocess-smoke \
-	docs-check autotune-check lint
+	decode-smoke docs-check autotune-check lint

@@ -11,6 +11,12 @@ import time
 BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent \
     / "BENCH_cluster.json"
 
+# Serving-engine benchmarks (decode batching) keep their scalars in a
+# sibling file; ``bench_diff`` globs every BENCH_*.json so both are
+# compared against HEAD the same way.
+BENCH_SERVE_PATH = pathlib.Path(__file__).resolve().parent.parent \
+    / "BENCH_serve.json"
+
 
 def timed(fn, *args, repeat: int = 1, **kw):
     """Returns (result, us_per_call)."""

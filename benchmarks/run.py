@@ -21,6 +21,7 @@ MODULES = [
     "benchmarks.fig15_unlocking",
     "benchmarks.fig_batching_sweep",
     "benchmarks.fig_cluster_scaling",
+    "benchmarks.fig_decode_batching",
     "benchmarks.fig_fault_recovery",
     "benchmarks.fig_fused_path",
     "benchmarks.fig_preprocess_offload",

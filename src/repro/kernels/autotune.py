@@ -1,7 +1,8 @@
 """Pallas kernel tiling autotuner with a persistent JSON cache.
 
 The Pallas kernels in this package (``matmul``, ``resize_bilinear``,
-``flash_attention``) used to hard-code their block sizes; the right
+``flash_attention``, ``decode_attention``) used to hard-code their
+block sizes; the right
 tiling depends on the problem shape (padding waste, operand re-reads
 per block revisit, MXU utilization, VMEM fit), so hard-coded defaults
 leave performance on the table exactly where the AI-tax paper says the
@@ -388,6 +389,70 @@ def attention_tiling(Sq: int, Skv: int, D: int, dtype: str = "float32", *,
 
 
 # --------------------------------------------------------------------------
+# decode attention (one token vs a KV cache — the serving fast path)
+# --------------------------------------------------------------------------
+
+def decode_key(L: int, D: int, dtype: str) -> str:
+    return f"decode/l{L}d{D}/{dtype}"
+
+
+def decode_candidates(L: int, D: int) -> list[dict[str, int]]:
+    """Legal ``blk_k`` tiles for a cache of length ``L``.
+
+    Candidates are the kernel-legalized forms of the pow2 sweep (the
+    kernel requires ``L % blk_k == 0``; ``legal_blk_k`` rounds each
+    request down to the largest divisor-aligned tile), deduplicated —
+    so every candidate traces, whatever the cache length.
+    """
+    from repro.kernels.decode_attention import legal_blk_k
+    out = []
+    for bk in _pow2s(128, 2048):
+        c = legal_blk_k(bk, L)
+        # per-step VMEM: double-buffered K+V tiles + f32 softmax state
+        vmem = 2 * 2 * c * D * _F32 + 2 * c * _F32
+        if vmem > _VMEM_BUDGET:
+            continue
+        if {"blk_k": c} not in out:
+            out.append({"blk_k": c})
+    return out or [{"blk_k": legal_blk_k(128, L)}]
+
+
+def decode_cost_us(L: int, D: int, dtype: str, blk_k: int) -> float:
+    """Per (batch, kv-head) cost of one ragged decode step.
+
+    Decode is bandwidth-bound: K and V stream once (2·L·D bytes); the
+    grid-step overhead is what separates tilings, so fewer, wider
+    blocks win until the tile stops filling the MXU edge or VMEM.
+    """
+    from repro.kernels.decode_attention import legal_blk_k
+    it = _itemsize(dtype)
+    c = legal_blk_k(blk_k, L)
+    n_blocks = L // c
+    byts = 2 * L * D * it + 2 * D * _F32            # K+V stream, q/o resident
+    flops = 4.0 * L * D                             # qk^T + pv per group row
+    peak = hw.PEAK_FLOPS_BF16 * (0.5 if it >= 4 else 1.0) * _mxu_eff(c)
+    t = max(flops / peak, byts / hw.HBM_BW) + n_blocks * _GRID_STEP_S
+    return t * 1e6
+
+
+def decode_tiling(L: int, D: int, dtype: str = "float32", *,
+                  cache: AutotuneCache | None = None,
+                  mode: str = "analytic") -> dict[str, int]:
+    """Best ``blk_k`` for a (cache_len, head_dim) decode; tunes on miss."""
+    cache = cache or get_cache()
+    key = decode_key(L, D, dtype)
+    hit = cache.lookup(key)
+    if hit is not None:
+        return dict(hit["blocks"])
+    cands = decode_candidates(L, D)
+    scored = [(decode_cost_us(L, D, dtype, **c), c) for c in cands]
+    best_us, best = min(scored, key=lambda sc: (sc[0], sorted(sc[1].items())))
+    cache.store(key, TuneResult(best, best_us, "analytic",
+                                len(cands)).to_json())
+    return dict(best)
+
+
+# --------------------------------------------------------------------------
 # Battery: the repo's hot-path shapes (refreshed by `make autotune`)
 # --------------------------------------------------------------------------
 
@@ -420,6 +485,12 @@ def hot_path_battery() -> dict[str, dict]:
         (2048, 2048, 128),          # prefill block
         (1024, 1024, 64),
     ]
+    shapes_dec = [
+        (1024, 64),                 # serving-engine decode cache
+        (2048, 128),                # production decode cache
+        (768, 64),                  # non-pow2 cache (legalized tiling)
+        (4096, 128),                # long-context decode
+    ]
     with tempfile.TemporaryDirectory() as tmp:
         scratch = AutotuneCache(path=pathlib.Path(tmp) / "battery.json",
                                 seed_path=None)
@@ -430,4 +501,7 @@ def hot_path_battery() -> dict[str, dict]:
             resize_tiling(H, W, oh, ow, "float32", cache=scratch)
         for Sq, Skv, D in shapes_at:
             attention_tiling(Sq, Skv, D, "bfloat16", cache=scratch)
+        for L, D in shapes_dec:
+            decode_tiling(L, D, "float32", cache=scratch)
+            decode_tiling(L, D, "bfloat16", cache=scratch)
         return dict(scratch._load())

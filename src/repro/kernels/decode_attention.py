@@ -21,6 +21,32 @@ from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 
+_LANE = 128
+
+
+def legal_blk_k(blk_k: int, L: int) -> int:
+    """Largest KV tile <= ``blk_k`` whose grid tiles ``L`` exactly.
+
+    The kernel's (batch, kv_heads, kv_blocks) grid requires ``L % blk_k
+    == 0``; a requested tile (the default, or an autotuned pick keyed on
+    a different cache length) is rounded down to the largest divisor of
+    ``L`` — preferring lane-aligned (multiple-of-128) tiles so the MXU
+    edge stays full — instead of tripping a trace-time assert on cache
+    lengths like 768 that the default 512 does not divide.
+    """
+    b = min(blk_k, L)
+    if b <= 0:
+        return L
+    if L % b == 0:
+        return b
+    for c in range(b - b % _LANE, 0, -_LANE):
+        if L % c == 0:
+            return c
+    for c in range(b, 0, -1):
+        if L % c == 0:
+            return c
+    return L
+
 
 def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
             scale: float, window: int | None, blk_k: int, n_blocks: int):
@@ -71,15 +97,14 @@ def decode_attention(
     kv_len: jax.Array,     # (B,) valid entries
     window: int | None = None,
     scale: float | None = None,
-    blk_k: int = 512,
+    blk_k: int | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     B, _, H, D = q.shape
     _, L, KV, Dv = v.shape
     G = H // KV
     scale = (1.0 / D**0.5) if scale is None else scale
-    blk_k = min(blk_k, L)
-    assert L % blk_k == 0, (L, blk_k)
+    blk_k = legal_blk_k(512 if blk_k is None else blk_k, L)
     n_blocks = L // blk_k
 
     qt = q.reshape(B, KV, G, D)                 # group-major layout

@@ -199,12 +199,17 @@ def decode_attention(
     window: int | None = None,
     scale: float | None = None,
     impl: Impl | None = None,
+    blk_k: int | None = None,
 ) -> jax.Array:
     impl = _resolve(impl)
     if impl in ("pallas", "pallas_interpret"):
         from repro.kernels import decode_attention as da
+        if blk_k is None:
+            from repro.kernels import autotune
+            blk_k = autotune.decode_tiling(k.shape[1], q.shape[-1],
+                                           str(q.dtype))["blk_k"]
         return da.decode_attention(q, k, v, kv_len=kv_len, window=window,
-                                   scale=scale,
+                                   scale=scale, blk_k=blk_k,
                                    interpret=(impl == "pallas_interpret"))
     B, _, H, D = q.shape
     _, L, KV, _ = k.shape

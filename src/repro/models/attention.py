@@ -150,27 +150,51 @@ def _roll_window(t, W):
 
 
 def attn_decode(cfg, spec, p, x, cache, cur_len):
-    """One-token decode. x: (B, 1, d); cur_len: scalar tokens-so-far."""
+    """One-token decode. x: (B, 1, d).
+
+    ``cur_len`` is the tokens-so-far count — a scalar (the classic
+    lock-step cache where every row is at the same position) or a
+    ``(B,)`` vector for continuous batching, where each slot of the
+    batched cache sits at its own length: positions, the cache insert,
+    and the validity mask are then all per-row, and the ragged
+    ``kv_len`` flows straight into :func:`ops.decode_attention` (the
+    Pallas ragged decode kernel's contract).
+    """
     if cfg.mla is not None:
         return _mla_decode(cfg, p, x, cache, cur_len)
     B = x.shape[0]
     H, KV, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    pos = jnp.full((B, 1), cur_len, jnp.int32)
+    ragged = jnp.ndim(cur_len) == 1
+    if ragged:
+        pos = cur_len.astype(jnp.int32)[:, None]
+    else:
+        pos = jnp.full((B, 1), cur_len, jnp.int32)
     q, k, v = _project_qkv(cfg, p, x, pos)
     L = cache["k"].shape[1]
     slot = cur_len % L if spec.window else cur_len
-    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
-    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    if ragged:
+        # per-row insert: row b writes its token at its own slot[b]
+        ck = cache["k"].at[jnp.arange(B), slot].set(k[:, 0])
+        cv = cache["v"].at[jnp.arange(B), slot].set(v[:, 0])
+    else:
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
     ck = shard(ck, "batch", "kv_seq", "kv_heads", None)
     cv = shard(cv, "batch", "kv_seq", "kv_heads", None)
     if spec.window:
         # rolling cache: slot s holds position s + L*floor((t-s)/L), t = cur_len
         s_idx = jnp.arange(L)
-        pos_of_slot = s_idx + L * ((cur_len - s_idx) // L)
-        valid = pos_of_slot >= 0
-        o = _masked_decode(cfg, q, ck, cv, valid[None].repeat(B, 0))
+        if ragged:
+            pos_of_slot = s_idx[None] + L * ((cur_len[:, None] - s_idx[None])
+                                             // L)
+            valid = pos_of_slot >= 0
+        else:
+            pos_of_slot = s_idx + L * ((cur_len - s_idx) // L)
+            valid = (pos_of_slot >= 0)[None].repeat(B, 0)
+        o = _masked_decode(cfg, q, ck, cv, valid)
     else:
-        kv_len = jnp.full((B,), cur_len + 1, jnp.int32)
+        kv_len = (cur_len.astype(jnp.int32) + 1 if ragged
+                  else jnp.full((B,), cur_len + 1, jnp.int32))
         o = ops.decode_attention(q, ck, cv, kv_len=kv_len)
     y = o.reshape(B, 1, H * D) @ p["wo"]
     return y, {"k": ck, "v": cv}
@@ -228,14 +252,28 @@ def _mla_apply(cfg, p, x, positions):
 
 
 def _mla_decode(cfg, p, x, cache, cur_len):
-    """Absorbed-matrix decode: attend in the 512-d latent space."""
+    """Absorbed-matrix decode: attend in the 512-d latent space.
+
+    ``cur_len`` scalar (lock-step) or ``(B,)`` (ragged slots), as in
+    :func:`attn_decode`.
+    """
     m = cfg.mla
     B = x.shape[0]
     H = cfg.n_heads
-    pos = jnp.full((B, 1), cur_len, jnp.int32)
+    ragged = jnp.ndim(cur_len) == 1
+    if ragged:
+        pos = cur_len.astype(jnp.int32)[:, None]
+    else:
+        pos = jnp.full((B, 1), cur_len, jnp.int32)
     q_nope, q_rope, ckv_t, kr_t = _mla_project(cfg, p, x, pos)
-    ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv_t, cur_len, axis=1)
-    kr = jax.lax.dynamic_update_slice_in_dim(cache["kr"], kr_t, cur_len, axis=1)
+    if ragged:
+        ckv = cache["ckv"].at[jnp.arange(B), cur_len].set(ckv_t[:, 0])
+        kr = cache["kr"].at[jnp.arange(B), cur_len].set(kr_t[:, 0])
+    else:
+        ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv_t,
+                                                  cur_len, axis=1)
+        kr = jax.lax.dynamic_update_slice_in_dim(cache["kr"], kr_t,
+                                                 cur_len, axis=1)
     ckv = shard(ckv, "batch", "kv_seq", None)
     kr = shard(kr, "batch", "kv_seq", None)
     wkv_b = p["wkv_b"].reshape(m.kv_lora, H, m.qk_nope + m.v_head)
@@ -248,8 +286,9 @@ def _mla_decode(cfg, p, x, cache, cur_len):
                     ckv.astype(jnp.float32))
          + jnp.einsum("bhr,bsr->bhs", q_rope[:, 0].astype(jnp.float32),
                       kr.astype(jnp.float32))) * scale
-    k_pos = jnp.arange(ckv.shape[1])[None]
-    s = jnp.where(k_pos[:, None] <= cur_len, s, ops.NEG_INF)
+    k_pos = jnp.arange(ckv.shape[1])
+    bound = cur_len[:, None, None] if ragged else cur_len
+    s = jnp.where(k_pos[None, None, :] <= bound, s, ops.NEG_INF)
     pr = jax.nn.softmax(s, axis=-1)
     o_lat = jnp.einsum("bhs,bsl->bhl", pr, ckv.astype(jnp.float32))   # (B,H,lora)
     o = jnp.einsum("bhl,lhv->bhv", o_lat.astype(x.dtype), wv)

@@ -85,6 +85,35 @@ class Model:
             return ed.encdec_decode_step(self.cfg, params, cache, tokens)
         return tf.lm_decode_step(self.cfg, params, cache, tokens)
 
+    def decode_step_ragged(self, params, blocks, tokens, kv_len):
+        """Continuous-batching decode over a batched block cache.
+
+        ``blocks`` is the ``"blocks"`` subtree of a batched cache (one
+        slot per batch row), ``kv_len`` the (B,) per-slot tokens-so-far
+        vector; slot occupancy lives with the caller, not the cache.
+        Decoder-only models only (the encoder-decoder cache keeps its
+        lock-step scalar).
+        """
+        if self.cfg.encdec:
+            raise NotImplementedError(
+                "ragged decode requires a decoder-only cache layout")
+        return tf.lm_decode_step_ragged(self.cfg, params, blocks, tokens,
+                                        kv_len)
+
+    def insert_prefill(self, blocks, one_blocks, slot):
+        """Write a single-request prefill cache into ``slot`` of a
+        batched block cache (continuous batching's prefill-on-admit).
+
+        ``blocks`` leaves are (n_repeats, slots, ...), ``one_blocks``
+        leaves (n_repeats, 1, ...) from a batch-1 ``prefill`` at the
+        same ``cache_len``; ``slot`` may be a traced int32, so one jit
+        of this serves every slot.
+        """
+        return jax.tree.map(
+            lambda big, one: jax.lax.dynamic_update_slice_in_dim(
+                big, one.astype(big.dtype), slot, axis=1),
+            blocks, one_blocks)
+
     # ---- dry-run stand-ins ----
     def input_specs(self, shape: ShapeConfig) -> dict[str, Any]:
         """ShapeDtypeStruct stand-ins for every model input of this shape."""

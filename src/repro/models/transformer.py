@@ -241,11 +241,14 @@ def lm_prefill(cfg, params, tokens, *, cache_len: int | None = None):
     return logits, {"blocks": caches, "cur_len": jnp.asarray(S, jnp.int32)}
 
 
-def lm_decode_step(cfg, params, cache, tokens):
-    """tokens: (B, 1). Returns (logits (B,V), new cache)."""
+def _lm_decode_blocks(cfg, params, blocks, tokens, cur_len):
+    """Shared decode body: one token per row against the block caches.
+
+    ``cur_len`` is scalar (lock-step) or ``(B,)`` (ragged slots); the
+    attention layers handle either form (see ``attn_decode``).
+    """
     dtype = jnp.dtype(cfg.dtype)
     params = cast_params(params, dtype)
-    cur_len = cache["cur_len"]
     x = embed_tokens(cfg, params["embed"], tokens, dtype)
 
     def block_fn(x, bp_cache):
@@ -257,8 +260,27 @@ def lm_decode_step(cfg, params, cache, tokens):
             new[f"l{i}"] = nc
         return x, new
 
-    x, new_caches = jax.lax.scan(block_fn, x,
-                                 (params["blocks"], cache["blocks"]))
+    x, new_caches = jax.lax.scan(block_fn, x, (params["blocks"], blocks))
     x = apply_norm(cfg, params["ln_f"], x)
     logits = unembed(cfg, params["embed"], x[:, -1:])[:, 0]
+    return logits, new_caches
+
+
+def lm_decode_step(cfg, params, cache, tokens):
+    """tokens: (B, 1). Returns (logits (B,V), new cache)."""
+    cur_len = cache["cur_len"]
+    logits, new_caches = _lm_decode_blocks(cfg, params, cache["blocks"],
+                                           tokens, cur_len)
     return logits, {"blocks": new_caches, "cur_len": cur_len + 1}
+
+
+def lm_decode_step_ragged(cfg, params, blocks, tokens, kv_len):
+    """Continuous-batching decode: every slot at its own cache length.
+
+    ``blocks`` is the batched block-cache tree (no ``cur_len`` — the
+    scheduler owns per-slot occupancy host-side), ``tokens`` (B, 1),
+    ``kv_len`` (B,) int32 tokens-so-far per slot. Returns
+    (logits (B, V), new blocks); the caller advances its own lengths.
+    """
+    return _lm_decode_blocks(cfg, params, blocks, tokens,
+                             kv_len.astype(jnp.int32))

@@ -1,20 +1,40 @@
 """Batched serving engine: continuous-batching decode over a KV cache.
 
 Production concerns covered at container scale:
-  * request queue with admission to fixed batch slots (continuous
-    batching: a finished slot is refilled on the next step, no global
-    drain);
-  * prefill-on-admit, decode in lock-step across slots;
-  * per-request AI-tax events (queue wait, prefill, per-token decode) via
-    the same EventLog as the paper's pipeline;
-  * straggler mitigation hook: slots exceeding ``max_tokens`` are evicted.
+  * request queue with admission to fixed batch slots;
+  * continuous batching (``scheduler="continuous"``, the default): ONE
+    batched KV cache of shape (slots, cache_len, ...) plus a host-side
+    per-slot occupancy vector, ONE jitted ragged decode step per
+    scheduler tick over all occupied slots (through
+    ``ops.decode_attention``, the Pallas ragged decode kernel's entry
+    point), and prefill-on-admit that writes a freed slot's cache rows
+    while the other slots keep decoding — requests join and leave the
+    running batch at token boundaries, finished slots are masked via
+    ``kv_len`` rather than drained;
+  * the pre-batching scheduler (``scheduler="slot"``) is kept as the
+    measured baseline: one jitted decode call per slot per token, the
+    per-token host round-trips the AI-tax paper predicts dominate once
+    the AI core is fast (``benchmarks/fig_decode_batching.py`` measures
+    the gap);
+  * per-request AI-tax events (queue wait, prefill, decode — batched
+    decode spans amortized per slot) via the same EventLog as the
+    paper's pipeline, with every device->host fetch both counted
+    (``d2h_syncs``/``d2h_bytes``) and logged as transfer events so the
+    ledger accounts every boundary byte;
+  * straggler mitigation hook: slots exceeding ``max_tokens`` are
+    evicted, where ``max_tokens`` bounds the total generated tokens
+    (prefill's token included — ``max_tokens=1`` emits exactly one
+    token and never runs a decode step).
 
-The engine is model-agnostic: any ``repro.models.model.Model`` works. On
-the container it runs tiny configs on CPU; the step functions are the
-same ones the dry-run lowers for the production mesh.
+The engine is model-agnostic: any ``repro.models.model.Model`` works
+(encoder-decoder caches keep the lock-step scalar layout, so those
+models fall back to the slot scheduler). On the container it runs tiny
+configs on CPU; the step functions are the same ones the dry-run
+lowers for the production mesh.
 """
 from __future__ import annotations
 
+import functools
 import queue
 import threading
 import time
@@ -30,12 +50,48 @@ from repro.core.events import EventLog
 from repro.core.metrics import LatencyStats, SLOReport, TailSLO
 
 
+# Jitted step functions live at module level with the (frozen, hashable)
+# Model as a static argument: every engine over the same model shares one
+# compiled executable instead of paying a per-instance retrace — the
+# decode-batching benchmark times steady-state dispatch, not compilation.
+@functools.partial(jax.jit, static_argnums=0)
+def _step_fused(model, params, cache, tokens):
+    logits, cache = model.decode_step(params, cache, tokens)
+    return jnp.argmax(logits.reshape(-1)).astype(jnp.int32), cache
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _step_plain(model, params, cache, tokens):
+    return model.decode_step(params, cache, tokens)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _step_batched_fused(model, params, blocks, packed):
+    # packed (2, B) int32: row 0 the feedback tokens, row 1 per-slot
+    # kv_len — one h2d upload per tick instead of two
+    logits, blocks = model.decode_step_ragged(params, blocks,
+                                              packed[0][:, None], packed[1])
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), blocks
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _step_batched_plain(model, params, blocks, packed):
+    return model.decode_step_ragged(params, blocks, packed[0][:, None],
+                                    packed[1])
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _insert_slot(model, blocks, one_blocks, slot):
+    return model.insert_prefill(blocks, one_blocks, slot)
+
+
 @dataclass
 class Request:
     rid: int
     prompt: np.ndarray            # (S,) int32
-    max_tokens: int = 16
+    max_tokens: int = 16          # bound on generated tokens (prefill incl.)
     t_submit: float = 0.0
+    t_first: float = 0.0          # first token ready (TTFT = t_first - t_submit)
     tokens: list = field(default_factory=list)
     done: bool = False
 
@@ -44,12 +100,19 @@ class ServingEngine:
     def __init__(self, model, params, *, batch_slots: int = 4,
                  cache_len: int = 128, greedy: bool = True,
                  fast_path: bool = True, max_queue: int | None = None,
-                 degrade=None):
+                 degrade=None, scheduler: str = "continuous"):
         self.model = model
         self.params = params
         self.slots = batch_slots
         self.cache_len = cache_len
         self.log = EventLog()
+        if scheduler not in ("continuous", "slot"):
+            raise ValueError(f"scheduler must be continuous/slot: {scheduler!r}")
+        if model.cfg.encdec and scheduler == "continuous":
+            # encoder-decoder caches are lock-step scalar-cur_len trees;
+            # the ragged batched layout is decoder-only
+            scheduler = "slot"
+        self.scheduler = scheduler
         # graceful degradation (duck-typed DegradePolicy, same ladder
         # as the serving cluster): under queue pressure, admitted
         # requests get max_tokens clamped by the current level's
@@ -74,18 +137,32 @@ class ServingEngine:
                                  timeout_s=0.0)
         self.active: list[Request | None] = [None] * batch_slots
         self.greedy = greedy
+        # ground truth of physical device->host fetches: every blocking
+        # read increments these, and the transfer ledger must account
+        # the same bytes (tests assert ledger == counters — the
+        # unlogged per-token cur_len sync of the pre-batching engine
+        # can't silently come back)
+        self.d2h_syncs = 0
+        self.d2h_bytes = 0
+        # continuous-batching state: per-slot occupancy and the token
+        # each slot feeds back next tick, BOTH host-resident — reading
+        # them never touches the device
+        self._kv_len = np.zeros(batch_slots, np.int32)
+        self._last_tok = np.zeros(batch_slots, np.int32)
+        self._blocks = None          # batched (slots, cache_len, ...) cache
         # fast_path: greedy token selection is fused into the jitted
-        # decode program, so one int32 crosses device->host per token;
-        # the unfused path fetches the full logit row and argmaxes on
-        # the host (the classic glue-code pattern the paper taxes)
+        # decode program, so one int32 per slot crosses device->host per
+        # step; the unfused path fetches the full logit rows and
+        # argmaxes on the host (the classic glue-code pattern the paper
+        # taxes)
         self.fast_path = fast_path
-        if fast_path:
-            def _decode_fused(params, cache, tokens):
-                logits, cache = model.decode_step(params, cache, tokens)
-                return jnp.argmax(logits.reshape(-1)).astype(jnp.int32), cache
-            self._decode = jax.jit(_decode_fused)
-        else:
-            self._decode = jax.jit(model.decode_step)
+        self._decode = functools.partial(
+            _step_fused if fast_path else _step_plain, model)
+        if scheduler == "continuous":
+            self._decode_batch = functools.partial(
+                _step_batched_fused if fast_path else _step_batched_plain,
+                model)
+            self._insert = functools.partial(_insert_slot, model)
 
     def submit(self, req: Request) -> bool:
         """Queue a request; False when admission control sheds it."""
@@ -107,7 +184,32 @@ class ServingEngine:
     def queue_depth(self) -> int:
         return self._pending.qsize()
 
-    # -- single-sequence prefill per admit; decode batched over slots ------
+    # -- degradation ladder -------------------------------------------------
+    def _degrade_tick(self) -> None:
+        """Re-evaluate the ladder on the per-slot backlog analogue (no
+        breakers here, so the open-fraction input is 0)."""
+        if self.degrade is None:
+            return
+        depth = self.degrade.decide(
+            self.queue_depth / max(self.slots, 1), 0.0, self._deg_depth)
+        if depth != self._deg_depth:
+            self._deg_depth = depth
+            self.degrade_timeline.append(
+                (time.perf_counter(), depth,
+                 self.degrade.level(depth).name))
+
+    def _degrade_clamp(self, req: Request) -> None:
+        if self.degrade is None or self._deg_depth <= 0:
+            return
+        lvl = self.degrade.level(self._deg_depth)
+        cap = max(1, int(req.max_tokens * lvl.service_factor))
+        if cap < req.max_tokens:
+            req.max_tokens = cap
+            t = time.perf_counter()
+            self.log.log(req.rid, "degrade", t, t,
+                         accuracy_proxy=lvl.accuracy_proxy, level=lvl.name)
+
+    # -- single-sequence prefill per admit ----------------------------------
     def _prefill_one(self, req: Request):
         t0 = time.perf_counter()
         tokens = jnp.asarray(req.prompt[None, :])
@@ -119,53 +221,134 @@ class ServingEngine:
                      int(req.prompt.nbytes))
         if self.fast_path:
             # argmax on device; only the winning index crosses
-            idx = jnp.argmax(logits[0])
-            self.log.log_transfer(req.rid, "d2h", int(idx.nbytes), "prefill")
+            idx = jnp.argmax(logits[0]).astype(jnp.int32)
             nxt = int(idx)
+            self.d2h_syncs += 1
+            self.d2h_bytes += int(idx.nbytes)
+            self.log.log_transfer(req.rid, "d2h", int(idx.nbytes), "prefill")
         else:
             row = np.asarray(logits[0])
+            self.d2h_syncs += 1
+            self.d2h_bytes += int(row.nbytes)
             self.log.log_transfer(req.rid, "d2h", int(row.nbytes), "prefill")
             nxt = int(np.argmax(row))
         req.tokens.append(nxt)
+        req.t_first = time.perf_counter()
         return cache, nxt
 
+    def _finished_early(self, req: Request, finished: list) -> bool:
+        """Post-prefill finish check — the generated-token bound counts
+        the prefill-produced token, so ``max_tokens=1`` (e.g. a degrade
+        clamp) finishes here and never runs a decode step; a prompt
+        already at cache capacity likewise never decodes into a full
+        cache."""
+        if (len(req.tokens) >= req.max_tokens
+                or len(req.prompt) >= self.cache_len - 1):
+            req.done = True
+            finished.append(req)
+            return True
+        return False
+
+    # -- schedulers ---------------------------------------------------------
     def run(self, max_steps: int = 512) -> list[Request]:
         """Processes the queue to completion (or step limit)."""
+        if self.scheduler == "continuous":
+            return self._run_continuous(max_steps)
+        return self._run_slot(max_steps)
+
+    def _admit_free_slots(self, finished: list) -> list[int]:
+        """Drain the submission topic into free slots; returns the slots
+        admitted this tick (prefill done, first token emitted)."""
+        free = [i for i in range(self.slots) if self.active[i] is None]
+        admitted = []
+        if not free:
+            return admitted
+        for i, req in zip(free, self.admission.poll(len(free))):
+            self.log.log(req.rid, "wait", req.t_submit, time.perf_counter())
+            self._degrade_clamp(req)
+            cache, _ = self._prefill_one(req)
+            if self._finished_early(req, finished):
+                continue
+            self.active[i] = req
+            admitted.append((i, cache))
+        return admitted
+
+    def _run_continuous(self, max_steps: int) -> list[Request]:
+        """One jitted ragged decode step per tick over all occupied
+        slots; admissions prefill into freed slots between ticks."""
         finished: list[Request] = []
-        caches: list = [None] * self.slots
         steps = 0
         while (any(self.active) or not self._pending.empty()) \
                 and steps < max_steps:
-            # degradation ladder: queue depth per slot is the engine's
-            # per-replica backlog analogue (no breakers here, so the
-            # open fraction input is 0)
-            if self.degrade is not None:
-                depth = self.degrade.decide(
-                    self.queue_depth / max(self.slots, 1), 0.0,
-                    self._deg_depth)
-                if depth != self._deg_depth:
-                    self._deg_depth = depth
-                    self.degrade_timeline.append(
-                        (time.perf_counter(), depth,
-                         self.degrade.level(depth).name))
-            # admit: drain the submission topic into free slots
-            free = [i for i in range(self.slots) if self.active[i] is None]
-            if free:
-                for i, req in zip(free, self.admission.poll(len(free))):
-                    self.log.log(req.rid, "wait", req.t_submit,
-                                 time.perf_counter())
-                    if self.degrade is not None and self._deg_depth > 0:
-                        lvl = self.degrade.level(self._deg_depth)
-                        cap = max(1, int(req.max_tokens
-                                         * lvl.service_factor))
-                        if cap < req.max_tokens:
-                            req.max_tokens = cap
-                            t = time.perf_counter()
-                            self.log.log(req.rid, "degrade", t, t,
-                                         accuracy_proxy=lvl.accuracy_proxy,
-                                         level=lvl.name)
-                    caches[i], _ = self._prefill_one(req)
-                    self.active[i] = req
+            self._degrade_tick()
+            for i, cache in self._admit_free_slots(finished):
+                req = self.active[i]
+                if self._blocks is None:
+                    self._blocks = self.model.init_cache(
+                        self.slots, self.cache_len)["blocks"]
+                slot = jnp.asarray(i, jnp.int32)
+                self.log.log_transfer(req.rid, "h2d", int(slot.nbytes),
+                                      "admit")
+                # device-side row insert: resident slots' rows untouched
+                self._blocks = self._insert(self._blocks, cache["blocks"],
+                                            slot)
+                self._kv_len[i] = len(req.prompt)
+                self._last_tok[i] = req.tokens[-1]
+            idx = [i for i in range(self.slots)
+                   if self.active[i] is not None]
+            if idx:
+                rids = [self.active[i].rid for i in idx]
+                t0 = time.perf_counter()
+                packed = jnp.asarray(
+                    np.stack([self._last_tok, self._kv_len]))
+                out, self._blocks = self._decode_batch(
+                    self.params, self._blocks, packed)
+                jax.block_until_ready(out)
+                t1 = time.perf_counter()
+                out_host = np.asarray(out)       # the ONE d2h per tick
+                self.d2h_syncs += 1
+                self.d2h_bytes += int(out_host.nbytes)
+                self.log.log_batch_span(rids, "decode", t0, t1)
+                # boundary bytes, padding (idle lanes) included: the
+                # whole slot vector crosses in one batched transfer
+                self.log.log_batch_transfers(
+                    rids, "decode", h2d=int(packed.nbytes),
+                    d2h=int(out_host.nbytes), t=t0)
+                nxt = out_host if self.fast_path else out_host.argmax(-1)
+                for i in idx:
+                    req = self.active[i]
+                    tok_i = int(nxt[i])
+                    req.tokens.append(tok_i)
+                    self._last_tok[i] = tok_i
+                    self._kv_len[i] += 1
+                    if (len(req.tokens) >= req.max_tokens
+                            or self._kv_len[i] >= self.cache_len - 1):
+                        # leave at a token boundary: the slot's rows stay
+                        # in the cache, masked out by kv_len=0 until a
+                        # new admission overwrites them
+                        req.done = True
+                        finished.append(req)
+                        self.active[i] = None
+                        self._kv_len[i] = 0
+                        self._last_tok[i] = 0
+            steps += 1
+        return finished
+
+    def _run_slot(self, max_steps: int) -> list[Request]:
+        """Baseline scheduler: one jitted decode call per slot per token
+        (per-token host round-trips — what continuous batching removes).
+        Cache occupancy is tracked host-side; the device is only read
+        for token values, and every such read is on the ledger."""
+        finished: list[Request] = []
+        caches: list = [None] * self.slots
+        occ = [0] * self.slots       # host-side cur_len mirror: no d2h read
+        steps = 0
+        while (any(self.active) or not self._pending.empty()) \
+                and steps < max_steps:
+            self._degrade_tick()
+            for i, cache in self._admit_free_slots(finished):
+                caches[i] = cache
+                occ[i] = len(self.active[i].prompt)
             # lock-step decode over occupied slots
             for i, req in enumerate(self.active):
                 if req is None:
@@ -179,6 +362,8 @@ class ServingEngine:
                                                       tok)
                     jax.block_until_ready(nxt_dev)
                     self.log.log(req.rid, "decode", t0, time.perf_counter())
+                    self.d2h_syncs += 1
+                    self.d2h_bytes += int(nxt_dev.nbytes)
                     self.log.log_transfer(req.rid, "d2h",
                                           int(nxt_dev.nbytes), "decode")
                     nxt = int(nxt_dev)
@@ -188,21 +373,39 @@ class ServingEngine:
                     jax.block_until_ready(logits)
                     self.log.log(req.rid, "decode", t0, time.perf_counter())
                     row = np.asarray(logits[0])
+                    self.d2h_syncs += 1
+                    self.d2h_bytes += int(row.nbytes)
                     self.log.log_transfer(req.rid, "d2h", int(row.nbytes),
                                           "decode")
                     nxt = int(np.argmax(row))
                 req.tokens.append(nxt)
-                at_cap = int(caches[i]["cur_len"]) >= self.cache_len - 1
-                if len(req.tokens) >= req.max_tokens or at_cap:
+                occ[i] += 1
+                if len(req.tokens) >= req.max_tokens \
+                        or occ[i] >= self.cache_len - 1:
                     req.done = True
                     finished.append(req)
                     self.active[i] = None
                     caches[i] = None
+                    occ[i] = 0
             steps += 1
         return finished
 
     def tax_report(self) -> dict:
         return self.log.ai_tax(ai_stages={"prefill", "decode"})
+
+    def ttft_samples(self) -> list[float]:
+        """Per-request time-to-first-token (submit -> prefill token),
+        for every request that produced one."""
+        # finished or still-resident requests both carry t_first
+        seen = {}
+        for ev in self.log.events:
+            if ev.stage == "prefill":
+                seen[ev.request_id] = ev.t_end
+        subs = {}
+        for ev in self.log.events:
+            if ev.stage == "wait":
+                subs[ev.request_id] = ev.t_start
+        return [t - subs[rid] for rid, t in seen.items() if rid in subs]
 
     def latency_report(self, slo: TailSLO | None = None,
                        ) -> tuple[LatencyStats, SLOReport | None]:

@@ -109,6 +109,81 @@ def test_decode_attention_kvlen_property(B, L, kvl):
     np.testing.assert_allclose(out1, out2, atol=1e-5, rtol=1e-5)
 
 
+def test_decode_attention_legal_blk_k():
+    """Tile legalization: largest lane-aligned divisor <= requested."""
+    from repro.kernels.decode_attention import legal_blk_k
+    assert legal_blk_k(512, 512) == 512
+    assert legal_blk_k(512, 768) == 384      # the cache_len=768 crash
+    assert legal_blk_k(512, 640) == 128
+    assert legal_blk_k(512, 1024) == 512
+    assert legal_blk_k(128, 1024) == 128
+    assert legal_blk_k(512, 17) == 17        # no aligned divisor: exact L
+    for L in (768, 640, 384, 96, 17):
+        b = legal_blk_k(512, L)
+        assert 0 < b <= min(512, L) and L % b == 0
+
+
+def test_decode_attention_nonaligned_cache_default_tile():
+    """cache_len=768 with the default (autotuned) blk_k used to crash at
+    trace time on ``L % blk_k == 0``; legalization must round the tile
+    down to a divisor and still match the oracle."""
+    B, L = 2, 768
+    q = _rand((B, 1, 4, 64), seed=20)
+    k = _rand((B, L, 2, 64), seed=21)
+    v = _rand((B, L, 2, 64), seed=22)
+    kv_len = jnp.asarray([L, 300])
+    out = decode_attention(q, k, v, kv_len=kv_len, interpret=True)
+    want = ops.decode_attention(q, k, v, kv_len=kv_len, impl="xla")
+    np.testing.assert_allclose(out, want, atol=3e-5, rtol=3e-5)
+
+
+def test_decode_attention_kvlen_zero_row_is_zeros():
+    """A slot with no valid cache (kv_len=0 — a freed/never-filled lane)
+    must come back as exact zeros, not NaN from an empty softmax."""
+    B, L = 3, 256
+    q = _rand((B, 1, 4, 32), seed=23)
+    k = _rand((B, L, 2, 32), seed=24)
+    v = _rand((B, L, 2, 32), seed=25)
+    kv_len = jnp.asarray([0, 128, 0])
+    out = decode_attention(q, k, v, kv_len=kv_len, interpret=True, blk_k=128)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    np.testing.assert_array_equal(np.asarray(out[0]), 0.0)
+    np.testing.assert_array_equal(np.asarray(out[2]), 0.0)
+    want = ops.decode_attention(q, k, v, kv_len=kv_len, impl="xla")
+    np.testing.assert_allclose(out[1], want[1], atol=3e-5, rtol=3e-5)
+
+
+def test_decode_attention_window_straddles_tile_boundary():
+    """Sliding window [kv_len-window, kv_len) crossing a blk_k edge:
+    both the partially-masked leading tile and the partially-valid
+    trailing tile must agree with the oracle."""
+    B, L = 2, 512
+    q = _rand((B, 1, 4, 64), seed=26)
+    k = _rand((B, L, 2, 64), seed=27)
+    v = _rand((B, L, 2, 64), seed=28)
+    # window [201, 300] straddles the 256 tile edge; [412, 511] the 384 one
+    kv_len = jnp.asarray([300, 511])
+    out = decode_attention(q, k, v, kv_len=kv_len, window=100,
+                           interpret=True, blk_k=128)
+    want = ops.decode_attention(q, k, v, kv_len=kv_len, window=100,
+                                impl="xla")
+    np.testing.assert_allclose(out, want, atol=3e-5, rtol=3e-5)
+
+
+def test_decode_attention_heterogeneous_kvlen_batch():
+    """A continuous-batching tick's worth of raggedness in one call:
+    empty, single-token, mid-cache, and full slots side by side."""
+    B, L = 4, 512
+    q = _rand((B, 1, 8, 64), seed=29)
+    k = _rand((B, L, 2, 64), seed=30)
+    v = _rand((B, L, 2, 64), seed=31)
+    kv_len = jnp.asarray([0, 1, 250, 512])
+    out = decode_attention(q, k, v, kv_len=kv_len, interpret=True, blk_k=256)
+    want = ops.decode_attention(q, k, v, kv_len=kv_len, impl="xla")
+    np.testing.assert_array_equal(np.asarray(out[0]), 0.0)
+    np.testing.assert_allclose(out[1:], want[1:], atol=3e-5, rtol=3e-5)
+
+
 # --------------------------------------------------------------------------
 # linear scans
 # --------------------------------------------------------------------------

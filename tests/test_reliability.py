@@ -298,3 +298,30 @@ def test_engine_degrade_clamps_generation_under_pressure():
     assert any(len(r.tokens) < 12 for r in done)   # generations clamped
     assert all(r.tokens for r in done)             # but never to zero
     assert eng.degrade_timeline
+    # the bound counts generated tokens exactly — the clamp is the cap,
+    # not cap+1 (the old engine's finish check missed the prefill token)
+    assert all(len(r.tokens) <= r.max_tokens for r in done)
+
+
+def test_engine_degrade_clamp_to_one_token_emits_exactly_one():
+    """A ladder clamp down to max_tokens=1 must emit exactly one token
+    (the prefill token) and skip decode entirely — the off-by-one used
+    to produce two."""
+    cfg = get_config("llama3-8b", smoke=True).replace(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(model, params, batch_slots=1, cache_len=48,
+                        degrade=DegradePolicy(enter_backlog=2.0,
+                                              exit_backlog=1.0))
+    rng = np.random.default_rng(1)
+    for rid in range(6):
+        eng.submit(Request(rid, rng.integers(0, cfg.vocab_size, 8),
+                           max_tokens=2))
+    done = eng.run()
+    assert len(done) == 6
+    clamped = {e.request_id for e in eng.log.events if e.stage == "degrade"}
+    assert clamped, "queue pressure never engaged the ladder"
+    by_rid = {r.rid: r for r in done}
+    for rid in clamped:
+        assert by_rid[rid].max_tokens == 1
+        assert len(by_rid[rid].tokens) == 1

@@ -80,3 +80,139 @@ def test_engine_respects_cache_capacity():
     done = eng.run()
     assert done[0].done
     assert len(done[0].tokens) <= 16
+
+
+def _prompts(cfg, n, length, seed=7):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, length) for _ in range(n)]
+
+
+def _run_engine(scheduler, reqs, slots=2, cache_len=48):
+    eng, cfg = _engine(slots=slots, cache_len=cache_len)
+    eng = ServingEngine(eng.model, eng.params, batch_slots=slots,
+                        cache_len=cache_len, scheduler=scheduler)
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    return eng, done
+
+
+@pytest.mark.parametrize("scheduler", ["continuous", "slot"])
+def test_engine_schedulers_agree(scheduler):
+    """Both schedulers produce the greedy stream for every request."""
+    eng, cfg = _engine(slots=2)
+    p = _prompts(cfg, 5, 9)
+    _, done1 = _run_engine("slot", [Request(i, p[i], max_tokens=5)
+                                    for i in range(5)])
+    _, done2 = _run_engine(scheduler, [Request(i, p[i], max_tokens=5)
+                                       for i in range(5)])
+    tok1 = {r.rid: r.tokens for r in done1}
+    tok2 = {r.rid: r.tokens for r in done2}
+    assert tok1 == tok2
+
+
+def test_engine_mid_flight_admit_joins_without_stalling_residents():
+    """A request admitted into a freed slot must not perturb the slots
+    still decoding: A and B's token streams are identical with and
+    without C in the system, and C's decode overlaps A's."""
+    eng, cfg = _engine(slots=2)
+    pa, pb, pc = _prompts(cfg, 3, 8, seed=11)
+
+    def make():
+        return [Request(0, pa, max_tokens=10),   # long-running resident
+                Request(1, pb, max_tokens=3),    # frees its slot early
+                Request(2, pc, max_tokens=4)]    # joins mid-flight of A
+
+    _, done_ab = _run_engine("continuous", make()[:2])
+    eng3, done_abc = _run_engine("continuous", make())
+    ab = {r.rid: r.tokens for r in done_ab}
+    abc = {r.rid: r.tokens for r in done_abc}
+    assert abc[0] == ab[0] and abc[1] == ab[1]
+    # C genuinely joined the running batch: its prefill lands before A's
+    # last decode tick, and A keeps producing after C's admission
+    c_prefill_end = max(e.t_end for e in eng3.log.events
+                        if e.request_id == 2 and e.stage == "prefill")
+    a_decodes_after = [e for e in eng3.log.events
+                       if e.request_id == 0 and e.stage == "decode"
+                       and e.t_start >= c_prefill_end]
+    assert a_decodes_after, "admitting C stalled resident slot A"
+
+
+def test_engine_same_seed_runs_bit_identical():
+    """Two fresh engines over the same params and workload produce
+    bit-identical token streams (lock-step batched decode is still
+    deterministic)."""
+    eng, cfg = _engine(slots=2)
+    p = _prompts(cfg, 4, 10, seed=13)
+    _, d1 = _run_engine("continuous", [Request(i, p[i], max_tokens=6)
+                                       for i in range(4)])
+    _, d2 = _run_engine("continuous", [Request(i, p[i], max_tokens=6)
+                                       for i in range(4)])
+    assert {r.rid: r.tokens for r in d1} == {r.rid: r.tokens for r in d2}
+
+
+@pytest.mark.parametrize("scheduler", ["continuous", "slot"])
+def test_engine_max_tokens_one_emits_exactly_one_token(scheduler):
+    """max_tokens bounds generated tokens INCLUDING the prefill token:
+    max_tokens=1 emits one token and never runs a decode step (the
+    off-by-one used to emit two)."""
+    eng, cfg = _engine(slots=2)
+    p = _prompts(cfg, 3, 8, seed=17)
+    eng, done = _run_engine(scheduler, [Request(i, p[i], max_tokens=1)
+                                        for i in range(3)])
+    assert len(done) == 3
+    assert all(len(r.tokens) == 1 for r in done)
+    assert not [e for e in eng.log.events if e.stage == "decode"]
+
+
+@pytest.mark.parametrize("scheduler", ["continuous", "slot"])
+def test_engine_transfer_ledger_accounts_every_d2h_byte(scheduler):
+    """Every physically fetched device->host byte in the fast-path run
+    is on the transfer ledger (the per-token ``cur_len`` sync of the
+    old engine was invisible to the tax accounting)."""
+    eng, cfg = _engine(slots=2)
+    p = _prompts(cfg, 4, 8, seed=19)
+    eng, done = _run_engine(scheduler, [Request(i, p[i], max_tokens=4)
+                                        for i in range(4)])
+    assert len(done) == 4
+    assert eng.d2h_syncs > 0
+    booked = eng.log.transfer_bytes()["d2h"]
+    assert booked == eng.d2h_bytes, (
+        f"ledger books {booked} d2h bytes, engine fetched {eng.d2h_bytes}")
+
+
+def test_engine_decode_d2h_roundtrips_collapse_with_batching():
+    """At full occupancy the continuous scheduler pays one d2h fetch per
+    tick, not per token: decode-phase round-trips drop slots-fold."""
+    eng, cfg = _engine()
+    p = _prompts(cfg, 4, 8, seed=23)
+    mk = lambda: [Request(i, p[i], max_tokens=5) for i in range(4)]
+    slot_eng, _ = _run_engine("slot", mk(), slots=2)
+    cont_eng, _ = _run_engine("continuous", mk(), slots=2)
+    # 4 prefill fetches either way; decode fetches: 16 vs 8 ticks
+    slot_decode = slot_eng.d2h_syncs - 4
+    cont_decode = cont_eng.d2h_syncs - 4
+    assert slot_decode == 2 * cont_decode
+
+
+def test_engine_cache_len_768_traces():
+    """cache_len=768 (not a multiple of the default KV tile) through the
+    Pallas decode kernel in interpret mode — the blk_k legalization
+    regression at engine level."""
+    from repro.kernels import ops
+    eng, cfg = _engine(slots=1, cache_len=768)
+    rng = np.random.default_rng(29)
+    with ops.default_impl("pallas_interpret"):
+        eng.submit(Request(0, rng.integers(0, cfg.vocab_size, 8),
+                           max_tokens=2))
+        done = eng.run()
+    assert len(done) == 1 and len(done[0].tokens) == 2
+
+
+def test_engine_ttft_samples_cover_all_requests():
+    eng, cfg = _engine(slots=2)
+    p = _prompts(cfg, 4, 8, seed=31)
+    eng, done = _run_engine("continuous", [Request(i, p[i], max_tokens=3)
+                                           for i in range(4)])
+    ttfts = eng.ttft_samples()
+    assert len(ttfts) == 4 and all(t > 0 for t in ttfts)
