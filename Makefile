@@ -17,6 +17,12 @@
 #                      recover goodput, degradation must buy p99 at a
 #                      booked accuracy cost, live-vs-DES agreement
 #                      within DES_TOL (RuntimeError on gate failure)
+#   make scenarios-smoke - digital-twin battery over the scenario
+#                      library: every trace must keep its stress
+#                      signature in the DES, live-vs-DES windowed
+#                      tail/tax must agree per heartbeat window, and
+#                      the second twin pass must hit the DES cache
+#                      (RuntimeError on gate failure)
 #   make bench-diff  - compare working-tree BENCH_*.json against HEAD's
 #                      committed baseline (direction-aware tolerances;
 #                      exits 1 on a gated regression)
@@ -53,8 +59,9 @@
 #                      lint_baseline.json; exit 0 clean / 1 findings /
 #                      2 internal error (see docs/static_analysis.md)
 .PHONY: test coverage bench-smoke cluster-smoke faults-smoke \
-	reliability-smoke preprocess-smoke decode-smoke bench-diff calibrate \
-	docs-lint docs-check des-golden autotune autotune-check lint check
+	reliability-smoke scenarios-smoke preprocess-smoke decode-smoke \
+	bench-diff calibrate docs-lint docs-check des-golden autotune \
+	autotune-check lint check
 
 PY := PYTHONPATH=src python
 
@@ -89,6 +96,9 @@ faults-smoke:
 reliability-smoke:
 	$(PY) -m benchmarks.fig_reliability --smoke
 
+scenarios-smoke:
+	$(PY) -m benchmarks.fig_scenarios --smoke
+
 bench-diff:
 	$(PY) scripts/bench_diff.py
 
@@ -118,5 +128,5 @@ autotune-check:
 lint:
 	$(PY) scripts/lint.py
 
-check: test bench-smoke faults-smoke reliability-smoke preprocess-smoke \
-	decode-smoke docs-check autotune-check lint
+check: test bench-smoke faults-smoke reliability-smoke scenarios-smoke \
+	preprocess-smoke decode-smoke docs-check autotune-check lint

@@ -1,0 +1,108 @@
+"""Scenario library replay: every workload shape is a gated twin test.
+
+Each library scenario (diurnal cycle, flash crowd, skewed camera
+fleet, burst/drain duty cycle) resolves to ONE versioned trace that
+drives BOTH execution engines — the DES replays it event-by-event,
+the live cluster replays it through real threads on a compressed wall
+clock. Three gates per scenario, all RuntimeError on failure:
+
+  * signature — the DES run must exhibit the shape's expected stress
+    (flash crowd spikes queue tax, skewed heat opens only the hot
+    partition's breaker, ...): a scenario that stops stressing what it
+    claims to stress is a broken fixture, not a soft regression;
+  * twin      — live-vs-DES windowed p99 AND five-way tax fractions
+    agree at ``DES_TOL`` on every heartbeat window both engines
+    populate (``crossval.twin_compare``), and both engines emit the
+    same heartbeat grid;
+  * cache     — the second twin pass for the same (spec, trace) pair
+    must be served from the ``TwinCache`` (the modeled half runs once
+    per spec revision; the recurring cost is one live run).
+
+Full mode adds the per-scenario replay knee: the smallest speedup S
+at which the trace replays stably in the DES. Gateable scalars land
+in ``BENCH_cluster.json`` (section ``scenarios``) for
+``scripts/bench_diff.py``; ``--smoke`` is the CI entry point
+(``make scenarios-smoke``) — same code paths, same horizon (the live
+half is wall-clock bound at ~1.5s per scenario either way).
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import BenchRecorder, row, timed
+from repro.cluster.crossval import (DES_TOL, TwinCache, scenario_knee,
+                                    twin_compare)
+from repro.cluster.scenarios import SCENARIOS, scenario_spec
+
+
+def _signature_row(name: str, rec: BenchRecorder) -> str:
+    """DES run + the scenario's own stress-signature check."""
+    spec = scenario_spec(name)
+    trace = spec.resolve_trace()
+    sim = spec.des_sim(speedup=1.0, sim_time=spec.sim_time, warmup=0.0)
+    res, us = timed(sim.run)
+    problems = SCENARIOS[name].check(sim, res, trace)
+    if problems:
+        raise RuntimeError(
+            f"scenario {name!r} lost its stress signature "
+            f"({SCENARIOS[name].signature}): " + "; ".join(problems))
+    rec.record(f"{name}.n_events", trace.n_events, better=None)
+    rec.record(f"{name}.offered_rate", trace.offered_rate, better=None)
+    return row(
+        f"{name}/signature", us,
+        f"events={trace.n_events};rate={trace.offered_rate:.1f}/s;"
+        f"hash={trace.trace_hash()};diverged={res.diverged};ok=True")
+
+
+def _twin_row(name: str, cache: TwinCache, rec: BenchRecorder) -> str:
+    """Live-vs-DES twin gate over the heartbeat windows."""
+    spec = scenario_spec(name)
+    rep, us = timed(twin_compare, spec, cache)
+    if not rep.agree:
+        rows = "; ".join(w.row() for w in rep.windows if not w.agree)
+        raise RuntimeError(
+            f"scenario {name!r} failed the twin gate at DES_TOL="
+            f"{DES_TOL}: {rows or 'fewer than 2 comparable windows'}")
+    rec.record(f"{name}.twin_p_err", rep.worst_p_err, better="lower",
+               tol=1.0, gate=False)        # live: diffable, not CI-gating
+    rec.record(f"{name}.twin_tax_diff", rep.worst_tax_diff,
+               better="lower", tol=1.0, gate=False)
+    return row(f"{name}/twin", us, rep.row())
+
+
+def run(smoke: bool = False) -> list[str]:
+    rec = BenchRecorder("scenarios", mode="smoke" if smoke else "full")
+    cache = TwinCache()
+    out = []
+    for name in SCENARIOS:
+        out.append(_signature_row(name, rec))
+        out.append(_twin_row(name, cache, rec))
+    if cache.hits:
+        raise RuntimeError("TwinCache hit during first passes — cache "
+                           "keys are colliding across scenarios")
+
+    # second pass for one scenario: the DES half must come from cache
+    rep2, us = timed(twin_compare, scenario_spec("diurnal"), cache)
+    if not rep2.cached:
+        raise RuntimeError("second twin pass re-ran the DES: TwinCache "
+                           "key (spec hash, trace hash) is unstable")
+    if not rep2.agree:
+        raise RuntimeError("cached twin pass disagrees: " + rep2.row())
+    out.append(row("diurnal/twin_cached", us,
+                   rep2.row() + f";hits={cache.hits}"))
+
+    if not smoke:
+        for name in SCENARIOS:
+            knee, us = timed(scenario_knee, scenario_spec(name), iters=4)
+            rec.record(f"{name}.replay_knee", knee, better=None)
+            out.append(row(f"{name}/knee", us, f"min_stable_S={knee:.2f}"))
+    rec.flush()
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (skips the replay-knee sweep)")
+    args = ap.parse_args()
+    print("\n".join(run(smoke=args.smoke)))

@@ -27,6 +27,7 @@ MODULES = [
     "benchmarks.fig_preprocess_offload",
     "benchmarks.fig_reliability",
     "benchmarks.fig_roofline_sweep",
+    "benchmarks.fig_scenarios",
     "benchmarks.tab34_tco",
     "benchmarks.roofline_table",
     "benchmarks.kernel_bench",

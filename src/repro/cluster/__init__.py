@@ -22,27 +22,48 @@ Modules:
   * ``reliability`` — deadline-aware request lifecycle: retry/hedge
     policies, per-target circuit breakers, graceful-degradation ladder
     (shared with the DES, duck-typed through the spec);
+  * ``trace``     — versioned JSONL workload traces + the replay
+    producer that paces them into live broker topics;
+  * ``scenarios`` — the trace library (diurnal, flash crowd, skewed
+    camera fleet, burst/drain) with per-shape stress-signature checks;
   * ``crossval``  — measured-vs-modeled knee comparison (live / DES /
-    closed-form), the loop ``benchmarks/fig_cluster_scaling.py`` plots.
+    closed-form) and the digital-twin loop: windowed live-vs-DES
+    tail/tax agreement per scenario, DES results cached per
+    (spec, trace) — ``benchmarks/fig_scenarios.py`` gates it.
 """
 from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig, ScaleAction
 from repro.cluster.cluster import ClusterResult, ClusterSpec, ServingCluster
 from repro.cluster.crossval import (KneeComparison, ReliabilityAgreement,
-                                    knee_comparison, reliability_agreement)
+                                    TwinCache, TwinReport, WindowComparison,
+                                    des_twin_summary, knee_comparison,
+                                    live_twin_summary, reliability_agreement,
+                                    scenario_knee, spec_key, twin_compare)
 from repro.cluster.faults import FaultEngine, FaultEvent, FaultPlan
-from repro.cluster.loadgen import ClosedLoopLoadGen, OpenLoopLoadGen
+from repro.cluster.loadgen import (ClosedLoopLoadGen, OpenLoopLoadGen,
+                                   rng_fingerprint)
 from repro.cluster.metrics import (LatencyStats, RecoveryReport,
                                    ReliabilityReport, SLOReport, TailSLO,
                                    recovery_report, reliability_report)
 from repro.cluster.reliability import (BreakerConfig, CircuitBreaker,
                                        DegradeLevel, DegradePolicy,
                                        RetryPolicy)
+from repro.cluster.scenarios import (SCENARIOS, Scenario, build_trace,
+                                     scenario_spec)
 from repro.cluster.scheduler import ConsumerGroup
+from repro.cluster.trace import (DEFAULT_PAYLOAD_BYTES, TraceError,
+                                 TraceEvent, TraceReplayProducer,
+                                 WorkloadTrace, record_loadgen)
 
 __all__ = [
     "ClusterResult", "ClusterSpec", "ServingCluster",
     "KneeComparison", "knee_comparison",
     "ReliabilityAgreement", "reliability_agreement",
+    "TwinCache", "TwinReport", "WindowComparison", "twin_compare",
+    "des_twin_summary", "live_twin_summary", "scenario_knee", "spec_key",
+    "SCENARIOS", "Scenario", "build_trace", "scenario_spec",
+    "DEFAULT_PAYLOAD_BYTES", "TraceError", "TraceEvent",
+    "TraceReplayProducer", "WorkloadTrace", "record_loadgen",
+    "rng_fingerprint",
     "FaultEngine", "FaultEvent", "FaultPlan",
     "Autoscaler", "AutoscalerConfig", "ScaleAction",
     "BreakerConfig", "CircuitBreaker", "DegradeLevel", "DegradePolicy",

@@ -94,6 +94,13 @@ class ClusterSpec:
     #                                      circuit breakers in both engines
     degrade: object = None               # DegradePolicy; graceful quality
     #                                      ladder in both engines
+    trace: object = None                 # WorkloadTrace; ONE recorded
+    #                                      arrival timeline replayed by
+    #                                      BOTH engines (replaces loadgen)
+    scenario: str | None = None          # library scenario name; resolved
+    #                                      to a trace at sim_time horizon
+    trace_speed: float = 1.0             # replay speed factor (the trace
+    #                                      is rescaled for both engines)
 
     @property
     def eff(self) -> float:
@@ -124,23 +131,45 @@ class ClusterSpec:
                           self.speedup)
         return {name: u.rho for name, u in us.items()}
 
+    def resolve_trace(self):
+        """The replay-ready trace both engines consume, or ``None``.
+
+        An explicit ``trace`` wins; otherwise a ``scenario`` name is
+        built at the spec's own horizon and seed (deterministic, so
+        repeated resolution yields hash-identical traces). The
+        ``trace_speed`` rescale is applied HERE, once, so the live
+        replayer and the DES see the identical compressed timeline.
+        """
+        tr = self.trace
+        if tr is None and self.scenario is not None:
+            from repro.cluster.scenarios import build_trace
+            tr = build_trace(self.scenario, horizon_s=self.sim_time,
+                             seed=self.seed)
+        if tr is None or self.trace_speed == 1.0:
+            return tr
+        return tr.rescale(self.trace_speed)
+
     def des_sim(self, speedup: float | None = None, *, sim_time: float = 20.0,
                 warmup: float = 4.0, seed: int | None = None) -> ClusterSim:
         """The equivalent DES run (scale pre-applied, so scale=1).
 
-        A spec with a ``fault_plan``, ``autoscale``, or explicit
-        ``n_partitions`` hands them to the DES (duck-typed — ``repro.
-        core`` never imports the cluster package), switching it onto
-        the dynamic-membership path so both engines replay one timeline
-        over one topology. Default specs keep the legacy static path
-        (pinned by the golden fixtures) byte-identical."""
+        A spec with a ``fault_plan``, ``autoscale``, explicit
+        ``n_partitions``, or a ``trace``/``scenario`` hands them to the
+        DES (duck-typed — ``repro.core`` never imports the cluster
+        package), switching it onto the dynamic-membership path so both
+        engines replay one timeline over one topology. Default specs
+        keep the legacy static path (pinned by the golden fixtures)
+        byte-identical."""
+        resolved = self.resolve_trace()
         kw: dict = {}
         if (self.fault_plan is not None or self.autoscale is not None
                 or self.n_partitions is not None or self.retry is not None
-                or self.breaker is not None or self.degrade is not None):
+                or self.breaker is not None or self.degrade is not None
+                or resolved is not None):
             kw = dict(fault_plan=self.fault_plan, autoscale=self.autoscale,
                       n_partitions=self.partitions, retry=self.retry,
-                      breaker=self.breaker, degrade=self.degrade)
+                      breaker=self.breaker, degrade=self.degrade,
+                      trace=resolved)
         return ClusterSim(self.scaled_workload(), self.scaled_broker(),
                           speedup=self.speedup if speedup is None else speedup,
                           scale=1.0, sim_time=sim_time, warmup=warmup,
@@ -173,6 +202,8 @@ class ClusterResult:
     inflight_samples: list = field(default_factory=list)  # (t, in-flight)
     reliability: dict | None = None    # ReliabilityReport.to_dict(), when
     #                                    a retry/breaker/degrade policy ran
+    heartbeats: list = field(default_factory=list)  # (window, t) trace
+    #                                    replay markers (trace runs only)
 
     @property
     def drop_fraction(self) -> float:
@@ -230,6 +261,7 @@ class ServingCluster:
         self._identify = None                  # lazy, real mode only
         self._n_spawned = 0
         self._inflight_samples: list[tuple[float, int]] = []
+        self.heartbeats: list[tuple[float, float]] = []  # trace replay
         self.fault_engine = None
         self.autoscaler = None
         # ---- reliability lifecycle (retry / hedge / breaker / degrade) ----
@@ -240,6 +272,8 @@ class ServingCluster:
         self._breakers: dict[int, object] = {}   # pi -> CircuitBreaker
         self._rel_state: dict[int, dict] = {}    # rid -> attempt ledger
         self._rel_completed: dict[int, float] = {}  # rid -> t_win (dedupe)
+        self._rel_inservice: dict[int, float | None] = {}  # rid -> planned
+        #                                      t_fin (None until known)
         self._rel_offered = 0
         self._rel_attempts = 0
         self._rel_retries = 0
@@ -305,7 +339,16 @@ class ServingCluster:
             rt.start()
         for _ in range(sp.n_replicas):
             self.add_replica()
-        if sp.loop == "closed":
+        trace = sp.resolve_trace()
+        if trace is not None:
+            # trace replay owns the arrival process (loadgen idle): one
+            # producer thread paces the recorded timeline with the
+            # BrokerWriter chunk discipline
+            tt = threading.Thread(target=self._trace_producer,
+                                  daemon=True, args=(trace,))
+            self._feeder_threads.append(tt)
+            tt.start()
+        elif sp.loop == "closed":
             gen = ClosedLoopLoadGen(sp.n_clients, sp.think_s,
                                     process=sp.arrival, seed=sp.seed)
             for i in range(gen.n_clients):
@@ -464,12 +507,19 @@ class ServingCluster:
         return np.random.default_rng(self.spec.seed * 7919 + stream)
 
     def _produce_one(self, rid: int, scheduled_model: float,
-                     crop_rng=None) -> bool:
-        """Admit + publish one message; False if dropped/rejected."""
+                     crop_rng=None, part=None, size=None) -> bool:
+        """Admit + publish one message; False if dropped/rejected.
+
+        ``part``/``size`` carry a trace event's pinned partition (keyed
+        traffic) and recorded payload; loadgen callers leave both None
+        (round-robin pick, workload payload) — unchanged behavior.
+        """
         sp = self.spec
         if self._rel_routed:
-            return self._produce_rel(rid, scheduled_model, crop_rng)
-        part = self.topic.pick_partition()
+            return self._produce_rel(rid, scheduled_model, crop_rng,
+                                     part=part, size=size)
+        if part is None:
+            part = self.topic.pick_partition()
         bounded = sp.admission in ("drop", "block")
         while True:            # check-and-admit atomically across producers
             with self._lock:
@@ -491,7 +541,9 @@ class ServingCluster:
             self.log.log(rid, "reject", now, now,
                          payload_bytes=int(sp.wl.face_bytes))
             return False
-        msg = Message(key=rid, size=sp.wl.face_bytes, t_produced=now)
+        msg = Message(key=rid,
+                      size=sp.wl.face_bytes if size is None else size,
+                      t_produced=now)
         msg.meta["scheduled"] = scheduled_model
         if sp.service == "real":
             import numpy as np
@@ -509,18 +561,20 @@ class ServingCluster:
     # ---- reliability lifecycle (mirrors the DES rel_send/rcheck path) -----
 
     def _produce_rel(self, rid: int, scheduled_model: float,
-                     crop_rng=None) -> bool:
+                     crop_rng=None, part=None, size=None) -> bool:
         """Register one request and issue its first attempt.
 
         The reliability path replaces bounded admission with breaker
         shedding: an attempt whose round-robin partition refuses it is
         rejected instantly (and retried after backoff, if the policy
         allows), never blocked — a client with a deadline cannot wait on
-        the producer side.
+        the producer side. A trace event's pinned ``part`` sticks for
+        the request's whole retry chain (keyed traffic is
+        partition-affine — same rule as the DES ``rel_send``).
         """
         sp = self.spec
         now = self._now_model()
-        size = sp.wl.face_bytes
+        size = sp.wl.face_bytes if size is None else size
         crop_yuv = None
         if sp.service == "real":
             import numpy as np
@@ -533,14 +587,17 @@ class ServingCluster:
             # re-sent message carries the ORIGINAL payload + t_produced
             # (client-perceived latency spans all attempts)
             self._rel_state[rid] = {"n": 0, "t0": now, "size": size,
-                                    "crop": crop_yuv}
+                                    "crop": crop_yuv,
+                                    "pin": part.index if part is not None
+                                    else None}
             self._rel_offered += 1
             self._lag_sum += max(0.0, now - scheduled_model)
         if sp.retry is not None:
-            self._rel_schedule(now + sp.retry.deadline_s, "dlcheck", rid)
+            t_dl = now + sp.retry.deadline_s
+            self._rel_schedule(t_dl, "dlcheck", (rid, t_dl))
             if sp.retry.hedge_delay_s is not None:
-                self._rel_schedule(now + sp.retry.hedge_delay_s,
-                                   "hedge", rid)
+                t_h = now + sp.retry.hedge_delay_s
+                self._rel_schedule(t_h, "hedge", (rid, t_h))
         return self._rel_attempt(rid, "attempt")
 
     def _rel_attempt(self, rid: int, origin: str) -> bool:
@@ -559,8 +616,11 @@ class ServingCluster:
         # the attempt is shed and retried against the NEXT partition
         # after backoff (scanning for any willing partition would
         # compound per-partition probe rates into near-certain
-        # admission — same rule as the DES pick_part_allowed)
-        part = self.topic.pick_partition()
+        # admission — same rule as the DES pick_part_allowed). A
+        # pinned (keyed-trace) request always faces its own partition.
+        pin = st.get("pin")
+        part = (self.topic.partitions[pin] if pin is not None
+                else self.topic.pick_partition())
         b = self._breakers.get(part.index)
         if b is not None and not b.allow(now):
             with self._lock:
@@ -568,8 +628,8 @@ class ServingCluster:
             self.log.log(rid, "reject", now, now, int(st["size"]),
                          reason="breaker_open")
             if retryable and retry.retry_allowed(now, st["t0"], n):
-                self._rel_schedule(now + retry.backoff_s(rid, n),
-                                   "republish", rid)
+                t_r = now + retry.backoff_s(rid, n)
+                self._rel_schedule(t_r, "republish", (rid, t_r))
             return False
         msg = Message(key=rid, size=st["size"], t_produced=st["t0"])
         msg.meta["rel_pub"] = now       # late-completion gate in _serve
@@ -580,8 +640,9 @@ class ServingCluster:
             self.produced += 1
         self.topic.publish(msg, part)
         if retry is not None:
-            self._rel_schedule(now + retry.attempt_timeout_s, "rcheck",
-                               (rid, part.index, retryable))
+            t_due = now + retry.attempt_timeout_s
+            self._rel_schedule(t_due, "rcheck",
+                               (rid, part.index, retryable, t_due))
         return True
 
     def _rel_schedule(self, t_model: float, kind: str, payload) -> None:
@@ -614,32 +675,65 @@ class ServingCluster:
                 t, _, kind, pl = heapq.heappop(self._rel_heap)
             self._rel_fire(kind, pl)
 
+    def _rel_verdict(self, rid: int, t_due: float):
+        """Model-time completion verdict for a timer due at ``t_due``.
+
+        The DES processes completions and timers in strict model-time
+        order, so an rcheck/dlcheck "sees" a completion iff its model
+        finish time precedes the timer. The live replica backdates each
+        item's ``t_fin`` inside the batch span but records it only when
+        the batch's service SLEEP ends — wall time runs ahead of the
+        books, and a membership test here would book false failures for
+        items that completed (in model time) mid-batch. So: defer the
+        verdict while the rid is mid-service, then compare recorded
+        ``t_fin`` against ``t_due`` — the same ordering the DES gets
+        for free. Returns ``("done"|"pending"|"defer", st)``.
+        """
+        with self._lock:
+            st = self._rel_state.get(rid)
+            t_fin = self._rel_completed.get(rid)
+            inserv = rid in self._rel_inservice
+            eta = self._rel_inservice.get(rid)
+        if st is None:
+            return "done", None
+        if t_fin is not None and t_fin <= t_due + 1e-12:
+            return "done", st
+        if t_fin is None and inserv:
+            if eta is None:
+                # real-service batch: no pacing plan, wait for the books
+                return "defer", st
+            # paced batch: rule punctually on the planned finish time
+            return ("done" if eta <= t_due + 1e-12 else "pending"), st
+        return "pending", st
+
     def _rel_fire(self, kind: str, pl) -> None:
         retry = self.spec.retry
         now = self._now_model()
         if kind == "rcheck":
             # attempt timeout: presumed lost -> breaker failure, and
             # (for the primary chain) a backed-off re-publish
-            rid, pi, retryable = pl
-            with self._lock:
-                done = rid in self._rel_completed
-                st = self._rel_state.get(rid)
-            if done or st is None:
+            rid, pi, retryable, t_due = pl
+            verdict, st = self._rel_verdict(rid, t_due)
+            if verdict == "done":
+                return
+            if verdict == "defer":
+                self._rel_schedule(now + 0.02, kind, pl)
                 return
             b = self._breakers.get(pi)
             if b is not None:
-                b.record(now, False)
-            if retryable and retry.retry_allowed(now, st["t0"], st["n"]):
-                self._rel_schedule(now + retry.backoff_s(rid, st["n"]),
-                                   "republish", rid)
+                b.record(t_due, False)
+            if retryable and retry.retry_allowed(t_due, st["t0"], st["n"]):
+                t_r = t_due + retry.backoff_s(rid, st["n"])
+                self._rel_schedule(t_r, "republish", (rid, t_r))
         elif kind in ("republish", "hedge"):
-            rid = pl
+            rid, t_due = pl
+            verdict, st = self._rel_verdict(rid, t_due)
+            if verdict == "done":
+                return
+            if verdict == "defer":
+                self._rel_schedule(now + 0.02, kind, pl)
+                return
             with self._lock:
-                if rid in self._rel_completed:
-                    return
-                st = self._rel_state.get(rid)
-                if st is None:
-                    return
                 if kind == "republish":
                     self._rel_retries += 1
                 else:
@@ -649,13 +743,44 @@ class ServingCluster:
             self._rel_attempt(rid, "retry" if kind == "republish"
                               else "hedge")
         elif kind == "dlcheck":
-            rid = pl
-            with self._lock:
-                missed = rid not in self._rel_completed
-                if missed:
+            rid, t_due = pl
+            verdict, _ = self._rel_verdict(rid, t_due)
+            if verdict == "defer":
+                self._rel_schedule(now + 0.02, kind, pl)
+                return
+            if verdict == "pending":
+                with self._lock:
                     self._rel_deadline_misses += 1
-            if missed:
-                self.log.log(rid, "deadline_miss", now, now)
+                self.log.log(rid, "deadline_miss", t_due, t_due)
+
+    def _trace_producer(self, trace) -> None:
+        """Replay the resolved trace into the live topic.
+
+        One thread paces every recorded arrival (the trace is already
+        rescaled, so the replayer runs at 1x): publishes go through the
+        ordinary ``_produce_one`` path with the event's pinned
+        partition and payload, and each completed heartbeat window is
+        recorded + logged as a zero-duration marker at its grid time —
+        the same (window, t) pairs the DES emits, so the twin loop
+        compares like against like.
+        """
+        from repro.cluster.trace import TraceReplayProducer
+        sp = self.spec
+        rng = self._crop_rng(0) if sp.service == "real" else None
+        rp = TraceReplayProducer(trace)
+
+        def publish(ev, t_rep):
+            part = (self.topic.partitions[ev.partition_key % sp.partitions]
+                    if ev.partition_key is not None else None)
+            self._produce_one(ev.rid, t_rep, rng, part=part,
+                              size=float(ev.payload_bytes))
+
+        def heartbeat(k, t_mark):
+            self.heartbeats.append((k, t_mark))
+            self.log.log(-1, "heartbeat", t_mark, t_mark, window=k)
+
+        rp.run_live(self.t0, self.wall_deadline, sp.time_compression,
+                    publish, heartbeat)
 
     def _producer(self, i: int, schedule: list[float]) -> None:
         sp = self.spec
@@ -794,6 +919,11 @@ class ServingCluster:
                     if dup:
                         self._rel_hedge_cancels += 1
                         part.consumed += 1
+                    else:
+                        # mid-service marker: timer verdicts defer until
+                        # this item's planned t_fin is known (set once
+                        # the batch's pacing plan is computed below)
+                        self._rel_inservice[msg.key] = None
                 if dup:
                     self.log.log(msg.key, "hedge_cancel", t_deq, t_deq,
                                  int(msg.size))
@@ -806,9 +936,6 @@ class ServingCluster:
         lvl = (sp.degrade.level(self._deg_depth)
                if sp.degrade is not None else None)
         low_res = False
-        for msg in batch:
-            self.log.log(msg.key, "wait", msg.t_produced, t_deq,
-                         payload_bytes=int(msg.size))
         if sp.service == "real":
             import numpy as np
             from repro.core import facerec
@@ -845,62 +972,101 @@ class ServingCluster:
             # service_factor scales the emulated identify span
             dur_model = (sp.wl.t_identify / sp.speedup * len(batch)
                          * (lvl.service_factor if lvl is not None else 1.0))
-            time.sleep(dur_model / sp.time_compression)
+            if not self._rel_routed:
+                time.sleep(dur_model / sp.time_compression)
         st.busy_model += dur_model  # lint: waive race-check -- per-replica state; only this replica thread writes it, merged after join
-        t_end = self._now_model()
-        dt = (t_end - t_deq) / len(batch)
         # real mode books accuracy cost only for the rung it actually
         # implements (the letterbox decode); paced mode emulates every
         # rung, so the ladder's proxy always applies
         applied = sp.service != "real" or low_res
         acc = (lvl.accuracy_proxy
                if (lvl is not None and applied) else 1.0)
+        if sp.service != "real" and self._rel_routed:
+            # item-by-item pacing at absolute wall deadlines: each
+            # completion goes on the books AT its model finish time, so
+            # breaker outcomes and timer-wheel verdicts observe
+            # completions in the model-time order the DES processes
+            # them in. Recording at batch end would let punctual
+            # timeout failures overtake backdated successes and
+            # scramble the breaker's windowed error fraction.
+            dt = dur_model / len(batch)
+            with self._lock:
+                # publish the pacing plan: timer verdicts can now rule
+                # punctually on mid-service items by planned t_fin
+                for j, m in enumerate(batch):
+                    if m.key in self._rel_inservice:
+                        self._rel_inservice[m.key] = t_deq + (j + 1) * dt
+            w0 = time.perf_counter()
+            for j, msg in enumerate(batch):
+                delay = (w0 + (j + 1) * dt / sp.time_compression
+                         - time.perf_counter())
+                if delay > 0:
+                    time.sleep(delay)
+                self._finish_item(st, part, msg, t_deq + j * dt,
+                                  t_deq + (j + 1) * dt, len(batch), acc)
+            return
+        t_end = self._now_model()
+        dt = (t_end - t_deq) / len(batch)
         for j, msg in enumerate(batch):
-            t_fin = t_deq + (j + 1) * dt
-            # consumed feeds part.in_flight, which _produce_one's
-            # admission check reads under _lock — keep the pair of
-            # counters consistent for bounded admission
-            if rel_on:
-                with self._lock:
-                    win = msg.key not in self._rel_completed
-                    if win:
-                        self._rel_completed[msg.key] = t_fin
-                    else:
-                        self._rel_hedge_wastes += 1
-                    part.consumed += 1
-                if not win:
-                    # both attempts were in service at once: the
-                    # loser's span is wasted work, not a completion
-                    self.log.log(msg.key, "hedge_waste", t_deq + j * dt,
-                                 t_fin, int(msg.size))
-                    st.consumed += 1  # lint: waive race-check -- per-replica state; only this replica thread writes it, merged after join
-                    continue
-            else:
-                with self._lock:
-                    part.consumed += 1
-            b = self._breakers.get(part.index)
-            if b is not None and not (
-                    rel_on and t_fin - msg.meta.get("rel_pub", t_fin)
-                    > sp.retry.attempt_timeout_s + 1e-12):
-                # a late completion is not a success signal: its rcheck
-                # already recorded the timeout as the outcome
-                b.record(t_fin, True)
-            self.log.log(msg.key, "identify", t_deq + j * dt, t_fin,
-                         payload_bytes=int(msg.size), batch_size=len(batch))
-            if acc < 1.0:
-                name = next((l.name for l in sp.degrade.levels
-                             if l.accuracy_proxy == acc), "degraded")
-                self.log.log(msg.key, "degrade", t_fin, t_fin,
-                             int(msg.size), accuracy_proxy=acc, level=name)
-            st.served += 1  # lint: waive race-check -- per-replica state; only this replica thread writes it, merged after join
-            st.consumed += 1  # lint: waive race-check -- per-replica state; only this replica thread writes it, merged after join
-            st.acc_sum += acc  # lint: waive race-check -- per-replica state; only this replica thread writes it, merged after join
-            st.acc_n += 1  # lint: waive race-check -- per-replica state; only this replica thread writes it, merged after join
-            st.latencies.append(
-                (msg.t_produced, t_fin - msg.t_produced))
-            evt = self._done_events.get(msg.key)
-            if evt is not None:
-                evt.set()
+            self._finish_item(st, part, msg, t_deq + j * dt,
+                              t_deq + (j + 1) * dt, len(batch), acc)
+
+    def _finish_item(self, st: _ReplicaState, part, msg: Message,
+                     t_start: float, t_fin: float, n_batch: int,
+                     acc: float) -> None:
+        """Book one served item's completion at model time ``t_fin``."""
+        sp = self.spec
+        rel_on = sp.retry is not None
+        # consumed feeds part.in_flight, which _produce_one's
+        # admission check reads under _lock — keep the pair of
+        # counters consistent for bounded admission
+        if rel_on:
+            with self._lock:
+                win = msg.key not in self._rel_completed
+                if win:
+                    self._rel_completed[msg.key] = t_fin
+                else:
+                    self._rel_hedge_wastes += 1
+                part.consumed += 1
+                self._rel_inservice.pop(msg.key, None)
+            if not win:
+                # both attempts were in service at once: the
+                # loser's span is wasted work, not a completion
+                self.log.log(msg.key, "hedge_waste", t_start,
+                             t_fin, int(msg.size))
+                st.consumed += 1  # lint: waive race-check -- per-replica state; only this replica thread writes it, merged after join
+                return
+        else:
+            with self._lock:
+                part.consumed += 1
+        b = self._breakers.get(part.index)
+        if b is not None and not (
+                rel_on and t_fin - msg.meta.get("rel_pub", t_fin)
+                > sp.retry.attempt_timeout_s + 1e-12):
+            # a late completion is not a success signal: its rcheck
+            # already recorded the timeout as the outcome
+            b.record(t_fin, True)
+        # the wait runs to THIS item's service start (like the DES's
+        # per-item t_consumed), not the batch dequeue — the hold inside
+        # a fetched batch is queue tax and must be on the books
+        self.log.log(msg.key, "wait", msg.t_produced, t_start,
+                     payload_bytes=int(msg.size))
+        self.log.log(msg.key, "identify", t_start, t_fin,
+                     payload_bytes=int(msg.size), batch_size=n_batch)
+        if acc < 1.0:
+            name = next((l.name for l in sp.degrade.levels
+                         if l.accuracy_proxy == acc), "degraded")
+            self.log.log(msg.key, "degrade", t_fin, t_fin,
+                         int(msg.size), accuracy_proxy=acc, level=name)
+        st.served += 1  # lint: waive race-check -- per-replica state; only this replica thread writes it, merged after join
+        st.consumed += 1  # lint: waive race-check -- per-replica state; only this replica thread writes it, merged after join
+        st.acc_sum += acc  # lint: waive race-check -- per-replica state; only this replica thread writes it, merged after join
+        st.acc_n += 1  # lint: waive race-check -- per-replica state; only this replica thread writes it, merged after join
+        st.latencies.append(
+            (msg.t_produced, t_fin - msg.t_produced))
+        evt = self._done_events.get(msg.key)
+        if evt is not None:
+            evt.set()
 
     # ---- results ----------------------------------------------------------
 
@@ -954,7 +1120,8 @@ class ServingCluster:
             samples=completions,
             inflight_samples=list(self._inflight_samples),
             reliability=self._reliability_dict(span_model, completions,
-                                               states))
+                                               states),
+            heartbeats=list(self.heartbeats))
         if self.slo is not None:
             result.slo = self.slo.check(stats, result.drop_fraction)
         return result

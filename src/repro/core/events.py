@@ -40,6 +40,10 @@ STAGE_CATEGORIES = {
     "retry": "queue", "hedge": "queue", "hedge_cancel": "queue",
     "hedge_waste": "queue", "deadline_miss": "queue",
     "degrade": "post",
+    # trace replay: zero-duration window marker on the trace's time
+    # axis (the digital-twin comparison grid); contributes no time, the
+    # bucket only keeps the canonical-table lint airtight
+    "heartbeat": "queue",
     "transfer": "transfer",
 }
 
@@ -277,6 +281,35 @@ class EventLog:
         out = dict.fromkeys(FIVE_WAY, 0.0)
         for ev in self.events:
             out[cat(ev.stage)] += ev.duration
+        return out
+
+    def windowed_five_way(self, category_of, window_s: float,
+                          fractions: bool = True) -> dict[int, dict]:
+        """Per-tumbling-window five-way attribution, keyed by window.
+
+        Events land in window ``int(t_end // window_s)`` (the heartbeat
+        grid the digital-twin comparison runs on — same t=0 alignment
+        as ``metrics.windowed_percentile``). With ``fractions=True``
+        each window's buckets sum to 1 when any time was recorded
+        (all-zero otherwise, e.g. a window holding only zero-duration
+        markers); with ``fractions=False`` raw busy seconds per bucket
+        are returned — what the flash-crowd signature check thresholds.
+        """
+        if window_s <= 0:
+            raise ValueError("window_s must be positive")
+        cat = self._kind_aware(category_of)
+        acc: dict[int, dict] = {}
+        for ev in self.events:
+            d = acc.setdefault(int(ev.t_end // window_s),
+                               dict.fromkeys(FIVE_WAY, 0.0))
+            d[cat(ev.stage)] += ev.duration
+        if not fractions:
+            return dict(sorted(acc.items()))
+        out = {}
+        for w, d in sorted(acc.items()):
+            grand = sum(d.values())
+            out[w] = ({k: v / grand for k, v in d.items()} if grand
+                      else d)
         return out
 
     def ai_tax(self, ai_stages: set[str],

@@ -149,7 +149,7 @@ class ClusterSim:
                  sim_time: float = 40.0, warmup: float = 8.0,
                  seed: int = 0, fault_plan=None, autoscale=None,
                  n_partitions: int | None = None, sample_dt: float = 0.25,
-                 retry=None, breaker=None, degrade=None):
+                 retry=None, breaker=None, degrade=None, trace=None):
         """``scale`` shrinks producer/consumer counts and broker bandwidth
         together, preserving utilizations and latencies while cutting the
         event count (840 producers -> 42 at scale=0.05).
@@ -175,7 +175,18 @@ class ClusterSim:
         for service time under pressure. They require unique message
         keys (the default one-face-per-frame emulation) because the
         lifecycle dedupes by request id, and they force the dynamic
-        path."""
+        path.
+
+        ``trace`` (a ``WorkloadTrace``-shaped object with ``.events``
+        of ``.t/.rid/.partition_key/.payload_bytes`` and
+        ``.heartbeat_s`` — duck-typed under the same layering rule)
+        replaces the producer tick process entirely: each trace event
+        publishes one message at its timestamp (post-client wire
+        arrival — no send cost, no linger, mirroring the live
+        ``TraceReplayProducer``), keyed events pin partition
+        ``key % n_partitions``, and a zero-duration ``heartbeat``
+        marker is logged per ``heartbeat_s`` window. Trace runs force
+        the dynamic path; without a trace nothing here changes."""
         self.wl = wl
         self.bk = bk
         self.S = speedup
@@ -193,9 +204,12 @@ class ClusterSim:
         self.retry = retry
         self.breaker = breaker
         self.degrade = degrade
+        self.trace = trace
+        self.heartbeats: list = []              # (window, t) trace markers
         self.dynamic = (fault_plan is not None or autoscale is not None
                         or n_partitions is not None or retry is not None
-                        or breaker is not None or degrade is not None)
+                        or breaker is not None or degrade is not None
+                        or trace is not None)
         self.n_partitions = n_partitions or self.n_cons
         self.sample_dt = sample_dt
         self.topic = Topic("faces", self.n_partitions, bk)
@@ -322,9 +336,18 @@ class ClusterSim:
 
         period = (wl.frame_period if wl.batch_per_tick
                   else wl.frame_period / (S if wl.accelerate_ingest else 1))
-        for p in range(self.n_prod):
-            push(self.rng.random() * period, "tick",
-                 {"producer": p, "scheduled": None})
+        if self.trace is None:
+            for p in range(self.n_prod):
+                push(self.rng.random() * period, "tick",
+                     {"producer": p, "scheduled": None})
+        else:
+            # trace replay owns the arrival process: events are pushed
+            # lazily (each schedules its successor) so a long trace
+            # never pre-loads the heap, and the heartbeat chain marks
+            # the comparison grid in lock-step with the live replayer
+            if self.trace.events:
+                push(self.trace.events[0].t, "tev", {"i": 0})
+            push(self.trace.heartbeat_s, "hb", {"k": 1})
 
         alive = set(range(self.n_cons))
         next_cid = self.n_cons
@@ -366,15 +389,21 @@ class ClusterSim:
                 return part
             return None
 
-        def rel_send(msg, push, origin="attempt"):
+        def rel_send(msg, push, origin="attempt", part=None):
             # publish one attempt (first / retry / hedge) through the
             # breaker-aware partition pick; schedules its own timeout
             # check, plus the request's deadline check and hedge on the
-            # first attempt
+            # first attempt. A keyed trace arrival passes ``part``;
+            # the pin sticks for the request's whole retry chain —
+            # keyed traffic is partition-affine, so a retry must face
+            # the SAME (possibly melted) partition's breaker rather
+            # than rotate around the hot key.
             rid = msg.key
             st = self._rel_state.get(rid)
             if st is None:
-                st = self._rel_state[rid] = {"n": 0, "t0": msg.t_produced}
+                st = self._rel_state[rid] = {
+                    "n": 0, "t0": msg.t_produced,
+                    "pin": part.index if part is not None else None}
                 self.rel_offered += 1
                 if rel_on:
                     push(st["t0"] + retry.deadline_s, "dlcheck", {"rid": rid})
@@ -384,7 +413,14 @@ class ClusterSim:
             st["n"] += 1
             self.rel_attempts += 1
             retryable = rel_on and origin != "hedge"
-            part = pick_part_allowed(msg.t_published)
+            pin = st.get("pin")
+            if pin is not None:
+                cand = self.topic.partitions[pin]
+                b = self._breakers.get(pin)
+                part = cand if (b is None or b.allow(msg.t_published)) \
+                    else None
+            else:
+                part = pick_part_allowed(msg.t_published)
             if part is None:
                 self.rel_sheds += 1
                 self.log.log(rid, "reject", msg.t_published, msg.t_published,
@@ -497,6 +533,33 @@ class ClusterSim:
                 break
             if kind == "tick":
                 self._do_tick(t, pl, push, period)
+            elif kind == "tev":
+                # one trace arrival: publish at its timestamp (wire
+                # arrival — no send cost / linger, like the live
+                # replayer), then schedule the next event lazily
+                ev = self.trace.events[pl["i"]]
+                msg = Message(key=ev.rid, size=float(ev.payload_bytes),
+                              t_produced=t)
+                msg.t_published = t
+                self._published += 1
+                part = (self.topic.partitions[
+                    ev.partition_key % self.n_partitions]
+                    if ev.partition_key is not None else None)
+                if self._send is not None:
+                    self._send(msg, push, part=part)
+                else:
+                    self._route(msg, part if part is not None
+                                else self.topic.pick_partition(), push)
+                if pl["i"] + 1 < len(self.trace.events):
+                    push(self.trace.events[pl["i"] + 1].t, "tev",
+                         {"i": pl["i"] + 1})
+            elif kind == "hb":
+                # heartbeat-window marker: the twin comparison grid
+                self.heartbeats.append((pl["k"], t))
+                self.log.log(-1, "heartbeat", t, t, window=pl["k"])
+                t_next = (pl["k"] + 1) * self.trace.heartbeat_s
+                if t_next <= self.sim_time + 1e-9:
+                    push(t_next, "hb", {"k": pl["k"] + 1})
             elif kind == "deliver":
                 part, msg = pl["part"], pl["msg"]
                 msg.t_written = t
@@ -731,8 +794,15 @@ class ClusterSim:
         span = max(self.sim_time - self.warmup, 1e-9)
         delays = self.ingest_delays or [0.0]
         d_mean = sum(delays) / len(delays)
-        lat = sorted((wl.frame_period / div) + m.broker_wait
-                     + wl.t_identify / S + d_mean for m in msgs)
+        if self.trace is not None:
+            # trace replay measures latency per completion (arrival ->
+            # done); the frame-period reconstruction below assumes the
+            # tick process and would misprice a recorded arrival shape
+            lat = sorted(l for tt, l in self.completions
+                         if tt - l >= self.warmup)
+        else:
+            lat = sorted((wl.frame_period / div) + m.broker_wait
+                         + wl.t_identify / S + d_mean for m in msgs)
         mean_lat = sum(lat) / len(lat) if lat else float("inf")
 
         # shared nearest-rank convention (repro.core.metrics), so the
@@ -757,8 +827,15 @@ class ClusterSim:
                     or d_mean > 5 * wl.frame_period)
         # instability = measured divergence OR analytic rho >= 1 (a short
         # sim can end before a just-unstable queue visibly diverges)
-        from repro.core.queueing import utilizations
-        rho_max = max(u.rho for u in utilizations(wl, self.bk, S).values())
+        if self.trace is None:
+            from repro.core.queueing import utilizations
+            rho_max = max(u.rho
+                          for u in utilizations(wl, self.bk, S).values())
+        else:
+            # the analytic rho prices the tick process; a trace's
+            # offered load is whatever it recorded, so only measured
+            # divergence can call a trace run unstable
+            rho_max = 0.0
         unstable = (backlog > 0.15 * max(len(self.msgs), 1)
                     or d_mean > 5 * wl.frame_period
                     or rho_max >= 0.995)

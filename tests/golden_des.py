@@ -28,6 +28,7 @@ def compute_goldens() -> dict:
     out: dict = {"sim_kw": dict(_SIM_KW), "fig10_11": {}, "fig15": {}}
     wl, bk = FaceRecWorkload(), BrokerConfig()
     out["fault_kill_revive"] = _fault_golden(wl, bk)
+    out["scenarios"] = _scenario_goldens()
     for s in (1, 2, 4, 6, 8):
         r = ClusterSim(wl, bk, speedup=s, **_SIM_KW).run()
         entry = {
@@ -57,6 +58,40 @@ def compute_goldens() -> dict:
     for frac in (1.0, 0.5, 0.25):
         out["fig15"][f"face_x{frac}"] = max_stable_speedup(
             FaceRecWorkload(face_bytes=37_300 * frac), bk)
+    return out
+
+
+def _scenario_goldens() -> dict:
+    """Pin the DES half of every library scenario's twin summary.
+
+    Traces are deterministic in (name, horizon, seed) and the DES
+    replay is deterministic given the trace, so the fixture pins the
+    trace identity (hash + event count), the windowed-p99 trajectory,
+    the per-window five-way tax split, and the replay knee — the exact
+    quantities the twin gate compares against the live cluster. A
+    scheduling or accounting refactor that moves any of them must
+    regenerate the fixture deliberately.
+    """
+    from repro.cluster.crossval import des_twin_summary, scenario_knee
+    from repro.cluster.scenarios import SCENARIOS, scenario_spec
+
+    out: dict = {}
+    for name in SCENARIOS:
+        spec = scenario_spec(name)
+        trace = spec.resolve_trace()
+        s = des_twin_summary(spec)
+        out[name] = {
+            "trace_hash": trace.trace_hash(),
+            "n_events": trace.n_events,
+            "horizon_s": s["horizon_s"],
+            "heartbeat_s": s["heartbeat_s"],
+            "diverged": s["diverged"],
+            "n_heartbeats": len(s["heartbeats"]),
+            "windows": s["windows"],
+            "five_way": s["five_way"],
+            "reliability": s["reliability"],
+            "replay_knee": scenario_knee(spec, iters=4),
+        }
     return out
 
 

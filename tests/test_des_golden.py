@@ -30,6 +30,15 @@ def _assert_close(path: str, want, got):
     if isinstance(want, float):
         assert math.isclose(got, want, rel_tol=REL_TOL, abs_tol=ABS_TOL), \
             f"{path}: fixture={want!r} current={got!r}"
+    elif isinstance(want, (list, tuple)):
+        assert len(got) == len(want), f"{path}: length {len(got)} != " \
+            f"{len(want)}"
+        for i, (w, g) in enumerate(zip(want, got)):
+            _assert_close(f"{path}[{i}]", w, g)
+    elif isinstance(want, dict):
+        assert set(got) == set(want), f"{path}: keys differ"
+        for k, w in want.items():
+            _assert_close(f"{path}.{k}", w, got[k])
     else:
         assert got == want, f"{path}: fixture={want!r} current={got!r}"
 
@@ -38,6 +47,8 @@ def test_fixture_exists_and_covers_the_sweep(golden):
     assert set(golden["fig10_11"]) == {"S1", "S2", "S4", "S6", "S8"}
     assert len(golden["fig15"]) == 11
     assert "fault_kill_revive" in golden
+    assert set(golden["scenarios"]) == {"diurnal", "flash_crowd",
+                                        "camera_fleet", "burst_drain"}
 
 
 def test_fault_kill_revive_matches_fixture(golden, current):
@@ -73,6 +84,36 @@ def test_fig10_11_des_quantities_match_fixture(golden, current):
 def test_fig15_unlock_points_match_fixture(golden, current):
     for cfg, want in golden["fig15"].items():
         _assert_close(f"fig15.{cfg}", want, current["fig15"][cfg])
+
+
+def test_scenario_twin_summaries_match_fixture(golden, current):
+    for name, want in golden["scenarios"].items():
+        got = current["scenarios"][name]
+        assert set(got) == set(want), name
+        for field, value in want.items():
+            _assert_close(f"scenarios.{name}.{field}", value, got[field])
+
+
+def test_scenario_fixture_pins_the_library_semantics(golden):
+    """The scenario fixture must keep encoding what the library
+    promises: every trace replays stably at S=1 (knee at or below 1),
+    the DES half populates the full heartbeat grid, and each window's
+    five-way tax split is a proper partition of unity."""
+    for name, f in golden["scenarios"].items():
+        assert not f["diverged"], name
+        assert f["replay_knee"] <= 1.0, name
+        assert f["n_heartbeats"] == round(f["horizon_s"]
+                                          / f["heartbeat_s"]), name
+        assert len(f["windows"]) >= 6, name
+        for k, fw in f["five_way"].items():
+            s = sum(fw.values())
+            # the final heartbeat fires exactly at the horizon and
+            # opens a boundary window holding only zero-duration
+            # markers — that one may sum to 0, every other must be a
+            # partition of unity
+            ok = math.isclose(s, 1.0, rel_tol=1e-9) or (
+                s == 0.0 and int(k) * f["heartbeat_s"] >= f["horizon_s"])
+            assert ok, f"{name} window {k}: five-way sums to {s}"
 
 
 def test_fixture_pins_the_paper_claims(golden):

@@ -1,0 +1,103 @@
+"""Scenario library determinism, seeding audit and the twin gate.
+
+Two regression families ride here:
+
+  * seeding — every generator kind draws from its own salted stream
+    (``loadgen._rng``), so no two (kind, seed, stream) combinations the
+    library can instantiate share an underlying sequence, and every
+    scenario builds bit-identically from the same seed;
+  * twin — one live run per CI-affordable scenario must agree with the
+    DES replay of the same trace on every heartbeat window (the full
+    four-scenario sweep is ``make scenarios-smoke``).
+"""
+import itertools
+
+import pytest
+
+from repro.cluster.loadgen import rng_fingerprint
+from repro.cluster.scenarios import SCENARIOS, build_trace, scenario_spec
+
+ALL = sorted(SCENARIOS)
+
+
+# ---- seeding audit ---------------------------------------------------------
+
+def test_salted_streams_are_pairwise_distinct():
+    """No (generator kind, seed, stream) pair may alias another."""
+    salts = ["open-loop", "closed-loop", "diurnal-profile",
+             *(f"scenario:{n}" for n in ALL)]
+    fps = {}
+    for salt, seed, stream in itertools.product(salts, (0, 1, 7),
+                                                (0, 1, 2, 11)):
+        fp = rng_fingerprint(seed, stream, salt)
+        assert fp not in fps, \
+            f"stream alias: {(salt, seed, stream)} == {fps[fp]}"
+        fps[fp] = (salt, seed, stream)
+
+
+def test_legacy_unsalted_stream_is_not_an_alias_of_salted():
+    assert rng_fingerprint(3, 5) != rng_fingerprint(3, 5, "open-loop")
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_same_seed_builds_bit_identical_traces(name):
+    a, b = build_trace(name), build_trace(name)
+    assert a == b
+    assert a.trace_hash() == b.trace_hash()
+    assert a.events == b.events          # tuple equality, every field
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_seed_actually_moves_the_trace(name):
+    assert build_trace(name, seed=0).trace_hash() != \
+        build_trace(name, seed=1).trace_hash()
+
+
+# ---- library shape ---------------------------------------------------------
+
+def test_unknown_scenario_is_rejected():
+    with pytest.raises(KeyError, match="unknown scenario"):
+        build_trace("rush_hour")
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_scenario_traces_are_valid_and_sized(name):
+    tr = build_trace(name)
+    assert tr.n_events > 100             # enough arrivals per window
+    assert tr.horizon_s == 6.0 and tr.n_windows == 8
+    spec = scenario_spec(name)
+    assert spec.resolve_trace().trace_hash() == tr.trace_hash()
+
+
+def test_camera_fleet_heat_is_keyed_and_skewed():
+    tr = build_trace("camera_fleet")
+    assert all(ev.partition_key is not None for ev in tr.events)
+    counts = tr.partition_counts(8)
+    hot = counts[0]
+    assert hot == max(counts.values())
+    assert hot > 3 * max(v for k, v in counts.items() if k != 0)
+
+
+def test_flash_crowd_concentrates_in_the_spike_window():
+    tr = build_trace("flash_crowd")
+    per_win = [0] * tr.n_windows
+    for ev in tr.events:
+        per_win[min(int(ev.t / tr.heartbeat_s), tr.n_windows - 1)] += 1
+    spike = max(per_win)
+    base = sorted(per_win)[len(per_win) // 2]
+    assert spike > 3 * base, per_win
+
+
+# ---- twin gate (one CI-priced live run; the sweep is scenarios-smoke) ------
+
+def test_diurnal_twin_gate_live_vs_des():
+    from repro.cluster.crossval import TwinCache, twin_compare
+
+    cache = TwinCache()
+    rep = twin_compare(scenario_spec("diurnal"), cache)
+    assert rep.agree, rep.row()
+    assert not rep.cached and cache.misses == 1
+    # same (spec hash, trace hash) -> the DES half comes from cache
+    rep2 = twin_compare(scenario_spec("diurnal"), cache)
+    assert rep2.cached and cache.hits == 1
+    assert rep2.agree, rep2.row()

@@ -1,0 +1,246 @@
+"""Trace format, replay-pacing and recorder invariants.
+
+The trace is the digital-twin contract: one validated JSONL timeline
+drives both engines, so the format must reject anything ambiguous
+(out-of-order, truncated, version-skewed) and the pure replay algebra
+must hold exactly — replaying at speed s is the SAME schedule as
+replaying the rescaled trace at 1x, and the recorder round-trips a
+load generator's arrivals bit-for-bit.
+"""
+import json
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    from hypothesis_fallback import given, settings, st
+
+from repro.cluster.trace import (DEFAULT_PAYLOAD_BYTES, TraceError,
+                                 TraceEvent, TraceReplayProducer,
+                                 WorkloadTrace, record_loadgen)
+
+
+def _trace(events=None, **kw):
+    if events is None:
+        events = (TraceEvent(0.5, 0), TraceEvent(1.0, 1, partition_key=3),
+                  TraceEvent(1.0, 2), TraceEvent(3.25, 3, payload_bytes=9.0))
+    base = dict(name="t", horizon_s=4.0, heartbeat_s=0.5, events=events)
+    base.update(kw)
+    return WorkloadTrace(**base)
+
+
+class FakeClock:
+    """Deterministic now/sleep pair for the pacing loop."""
+
+    def __init__(self, t0: float = 100.0, tick: float = 1e-4):
+        self.t = t0
+        self.tick = tick      # time cost of a now() poll
+        self.slept: list[float] = []
+
+    def now(self) -> float:
+        self.t += self.tick
+        return self.t
+
+    def sleep(self, dt: float) -> None:
+        self.slept.append(dt)
+        self.t += dt
+
+
+def _replay(trace, speed=1.0, compression=8.0, deadline=1e9):
+    """Run the pacing loop on a fake clock, return (producer, publishes)."""
+    prod = TraceReplayProducer(trace, speed_factor=speed)
+    clk = FakeClock()
+    out: list[tuple[int, float]] = []
+    n = prod.run_live(clk.now(), deadline, compression,
+                      lambda ev, t_rep: out.append((ev.rid, t_rep)),
+                      now=clk.now, sleep=clk.sleep)
+    assert n == len(out)
+    return prod, out
+
+
+# ---- format validation -----------------------------------------------------
+
+def test_rejects_out_of_order_events():
+    with pytest.raises(TraceError, match="out of order"):
+        _trace(events=(TraceEvent(1.0, 0), TraceEvent(0.5, 1)))
+
+
+def test_rejects_duplicate_rids_and_horizon_overrun():
+    with pytest.raises(TraceError, match="duplicate rid"):
+        _trace(events=(TraceEvent(0.5, 7), TraceEvent(0.6, 7)))
+    with pytest.raises(TraceError, match="beyond horizon"):
+        _trace(events=(TraceEvent(5.0, 0),))
+
+
+def test_rejects_version_mismatch_and_bad_fields():
+    with pytest.raises(TraceError, match="unsupported trace version"):
+        _trace(version=2)
+    with pytest.raises(TraceError, match="t must be >= 0"):
+        TraceEvent(-0.1, 0)
+    with pytest.raises(TraceError, match="payload_bytes"):
+        TraceEvent(0.0, 0, payload_bytes=0.0)
+    with pytest.raises(TraceError, match="horizon_s"):
+        _trace(horizon_s=0.0)
+
+
+def test_jsonl_round_trip_preserves_trace_and_hash(tmp_path):
+    tr = _trace()
+    p = tmp_path / "t.jsonl"
+    tr.to_jsonl(p)
+    back = WorkloadTrace.from_jsonl(p)
+    assert back == tr
+    assert back.trace_hash() == tr.trace_hash()
+    # content hash actually covers content
+    other = _trace(events=tr.events[:-1] + (TraceEvent(3.25, 99),))
+    assert other.trace_hash() != tr.trace_hash()
+
+
+@pytest.mark.parametrize("mutate, match", [
+    (lambda L: [], "empty trace file"),
+    (lambda L: ["not json"] + L[1:], "not valid JSON"),
+    (lambda L: [json.dumps({"format": "other"})] + L[1:],
+     "missing 'repro-trace' header"),
+    (lambda L: [L[0].replace('"version": 1', '"version": 99')] + L[1:],
+     "unsupported trace version"),
+    (lambda L: [json.dumps({"format": "repro-trace", "version": 1})] + L[1:],
+     "missing required field"),
+    (lambda L: L[:1] + ["{bad"] + L[2:], "not valid JSON"),
+    (lambda L: L[:1] + [json.dumps({"t": 0.5})] + L[2:], "bad event"),
+    (lambda L: [L[0], L[2], L[1]] + L[3:], "out-of-order event"),
+    (lambda L: L[:-1], "truncated or padded"),
+])
+def test_from_jsonl_rejects_malformed_files(tmp_path, mutate, match):
+    p = tmp_path / "t.jsonl"
+    _trace().to_jsonl(p)
+    lines = p.read_text().splitlines()
+    p.write_text("\n".join(mutate(lines)) + "\n")
+    with pytest.raises(TraceError, match=match):
+        WorkloadTrace.from_jsonl(p)
+
+
+# ---- replay algebra --------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.floats(0.25, 8.0))
+def test_rescale_equals_speed_factor_replay(s):
+    """timeline() at speed s == rescaled-trace timeline at speed 1."""
+    tr = _trace()
+    fast = TraceReplayProducer(tr, speed_factor=s).timeline()
+    flat = TraceReplayProducer(tr.rescale(s), speed_factor=1.0).timeline()
+    assert len(fast) == len(flat)
+    for (ta, ea), (tb, eb) in zip(fast, flat):
+        assert ta == pytest.approx(tb, rel=1e-12)
+        assert (ea.rid, ea.partition_key, ea.payload_bytes) == \
+            (eb.rid, eb.partition_key, eb.payload_bytes)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.floats(0.5, 4.0))
+def test_rescale_preserves_window_structure(s):
+    tr = _trace()
+    rs = tr.rescale(s)
+    assert rs.n_windows == tr.n_windows
+    assert rs.n_events == tr.n_events
+    assert rs.offered_rate == pytest.approx(tr.offered_rate * s)
+    # window index of every event is invariant under rescale
+    for ev, rv in zip(tr.events, rs.events):
+        assert int(ev.t / tr.heartbeat_s + 1e-9) == \
+            int(rv.t / rs.heartbeat_s + 1e-9)
+
+
+def test_rescale_identity_and_validation():
+    tr = _trace()
+    assert tr.rescale(1.0) is tr
+    with pytest.raises(TraceError):
+        tr.rescale(0.0)
+    with pytest.raises(TraceError):
+        TraceReplayProducer(tr, speed_factor=-1.0)
+
+
+def test_live_pacing_publishes_everything_in_order():
+    tr = _trace()
+    prod, out = _replay(tr)
+    assert [rid for rid, _ in out] == [ev.rid for ev in tr.events]
+    assert [t for _, t in out] == [ev.t for ev in tr.events]
+    # heartbeats cover the whole horizon in order, incl. trailing windows
+    assert [w for w, _ in prod.heartbeats] == list(range(1, 9))
+    assert prod.heartbeats[-1] == (8, pytest.approx(4.0))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.floats(0.5, 4.0))
+def test_live_pacing_speed_factor_equivalence(s):
+    """run_live at speed s publishes the same rid sequence, at replay
+    times scaled by 1/s, as the rescaled trace at speed 1."""
+    tr = _trace()
+    _, fast = _replay(tr, speed=s)
+    _, flat = _replay(tr.rescale(s), speed=1.0)
+    assert [r for r, _ in fast] == [r for r, _ in flat]
+    for (_, ta), (_, tb) in zip(fast, flat):
+        assert ta == pytest.approx(tb, rel=1e-9)
+
+
+def test_live_pacing_respects_wall_deadline():
+    tr = _trace()
+    clk = FakeClock()
+    t0 = clk.now()
+    prod = TraceReplayProducer(tr)
+    out = []
+    # deadline lands between the first event (t=0.5 -> wall t0+0.0625)
+    # and the t=1.0 pair
+    n = prod.run_live(t0, t0 + 0.1, 8.0,
+                      lambda ev, t: out.append(ev.rid),
+                      now=clk.now, sleep=clk.sleep)
+    assert n == len(out) == 1 and out == [0]
+
+
+def test_record_loadgen_round_trip():
+    from repro.cluster.loadgen import OpenLoopLoadGen
+
+    gen = OpenLoopLoadGen(n_producers=3, period_s=0.2,
+                          process="poisson", seed=7)
+    tr = record_loadgen(gen, 4.0, name="rt")
+    assert tr.name == "rt" and tr.horizon_s == 4.0
+    assert tr.heartbeat_s == pytest.approx(0.5)
+    # every producer's arrivals present under the live rid convention
+    want = sorted((t, p + k * gen.n_producers)
+                  for p in range(gen.n_producers)
+                  for k, t in enumerate(gen.schedule(p, 4.0)))
+    assert [(ev.t, ev.rid) for ev in tr.events] == want
+    assert all(ev.payload_bytes == DEFAULT_PAYLOAD_BYTES
+               for ev in tr.events)
+    # unkeyed recording round-robins across partitions deterministically
+    counts = tr.partition_counts(4)
+    assert sum(counts.values()) == tr.n_events
+    assert max(counts.values()) - min(counts.values()) <= 1
+    # replaying the recording reproduces it exactly
+    _, out = _replay(tr)
+    assert [(rid, t) for rid, t in out] == \
+        [(ev.rid, ev.t) for ev in tr.events]
+
+
+def test_committed_example_trace_loads_and_hashes_stably():
+    """The checked-in fixture is the portable-format regression: it was
+    written by an earlier revision, so today's parser must still accept
+    it and today's hash must still match — hash drift would silently
+    invalidate every persisted TwinCache entry."""
+    import pathlib
+
+    p = pathlib.Path(__file__).parent / "fixtures" / "trace_smoke.jsonl"
+    tr = WorkloadTrace.from_jsonl(p)
+    assert tr.name == "smoke" and tr.n_events == 35
+    assert tr.trace_hash() == "e9642dcdab94e2ad"
+    _, out = _replay(tr)
+    assert len(out) == 35
+
+
+def test_partition_counts_pin_keys_and_round_robin_unkeyed():
+    tr = _trace(events=(TraceEvent(0.1, 0, partition_key=5),
+                        TraceEvent(0.2, 1),
+                        TraceEvent(0.3, 2, partition_key=5),
+                        TraceEvent(0.4, 3),
+                        TraceEvent(0.5, 4)))
+    # keys pin key % n; the round-robin counter advances ONLY on
+    # unkeyed events: rids 1, 3, 4 -> partitions 0, 1, 2
+    assert tr.partition_counts(3) == {0: 1, 1: 1, 2: 3}
